@@ -1,0 +1,74 @@
+"""Paper Fig. 6 — node classification accuracy: exact Fast-Node2Vec vs
+FN-Approx vs the Spark trim-30 baseline.
+
+BlogCatalog is not available offline; a labeled SBM graph reproduces the
+qualitative claim: the trim baseline destroys accuracy while FN-Approx
+matches FN-Exact. Derived column: micro-F1 / macro-F1 on a 50% split."""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import row, time_fn
+from repro.core import rmat
+from repro.core.node2vec import Node2VecConfig, generate_walks, \
+    train_embeddings
+
+
+def _f1(emb, labels, seed=0):
+    rng = np.random.default_rng(seed)
+    n = emb.shape[0]
+    k = labels.max() + 1
+    idx = rng.permutation(n)
+    tr, te = idx[:n // 2], idx[n // 2:]
+    y = np.eye(k)[labels]
+    w, *_ = np.linalg.lstsq(emb[tr], y[tr], rcond=None)
+    pred = (emb[te] @ w).argmax(1)
+    gold = labels[te]
+    micro = (pred == gold).mean()
+    f1s = []
+    for c in range(k):
+        tp = ((pred == c) & (gold == c)).sum()
+        fp = ((pred == c) & (gold != c)).sum()
+        fn = ((pred != c) & (gold == c)).sum()
+        p = tp / max(tp + fp, 1)
+        r = tp / max(tp + fn, 1)
+        f1s.append(2 * p * r / max(p + r, 1e-9))
+    return micro, float(np.mean(f1s))
+
+
+def run():
+    # SBM with weighted edges so trim-by-weight actually bites
+    g, labels = rmat.sbm_labeled(n=400, num_communities=4, p_in=0.06,
+                                 p_out=0.004, seed=1)
+    rng = np.random.default_rng(0)
+    g.wgt = (rng.random(g.m) * 4 + 0.5).astype(np.float32)
+
+    base = dict(p=1.0, q=0.5, walk_length=20, num_walks=4, window=5, dim=32,
+                epochs=2, batch_size=4096, seed=0)
+    variants = {
+        "fn_exact": Node2VecConfig(mode="exact", **base),
+        "fn_approx": Node2VecConfig(mode="approx", approx_eps=5e-2,
+                                    cap=16, **base),
+        # beyond-paper static-shape-native approximation (EXPERIMENTS §Perf)
+        "fn_approx_always": Node2VecConfig(mode="approx_always", cap=16,
+                                           **base),
+    }
+    for name, cfg in variants.items():
+        walks = generate_walks(g, cfg)
+        emb = train_embeddings(g, walks, cfg)
+        micro, macro = _f1(emb, labels)
+        row(f"accuracy_{name}", 0.0, f"micro_f1={micro:.3f};"
+                                     f"macro_f1={macro:.3f}")
+    # spark-trim30 baseline (here trim-4 to match the smaller degree scale:
+    # paper keeps 30 of ~100s-1000s of edges; we keep ~similar fraction)
+    trimmed = g.trim_top_weights(4)
+    cfg = Node2VecConfig(mode="exact", **base)
+    walks = generate_walks(trimmed, cfg)
+    emb = train_embeddings(trimmed, walks, cfg)
+    micro, macro = _f1(emb, labels)
+    row("accuracy_spark_trim", 0.0, f"micro_f1={micro:.3f};"
+                                    f"macro_f1={macro:.3f}")
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,33 @@
+"""Shared benchmark helpers. All benches print ``name,us_per_call,derived``
+CSV rows (one per configuration) so ``benchmarks.run`` stays parseable."""
+from __future__ import annotations
+
+import time
+from typing import Callable
+
+import numpy as np
+
+
+def time_fn(fn: Callable, *args, warmup: int = 1, iters: int = 3) -> float:
+    """Median wall time per call in microseconds (after jit warmup)."""
+    for _ in range(warmup):
+        out = fn(*args)
+    _block(out)
+    times = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        out = fn(*args)
+        _block(out)
+        times.append(time.perf_counter() - t0)
+    return float(np.median(times) * 1e6)
+
+
+def _block(out):
+    import jax
+    jax.block_until_ready(out)
+
+
+def row(name: str, us: float, derived: str = "") -> str:
+    line = f"{name},{us:.1f},{derived}"
+    print(line, flush=True)
+    return line

@@ -1,0 +1,61 @@
+"""Render EXPERIMENTS.md markdown tables from dry-run artifacts.
+
+  PYTHONPATH=src python -m benchmarks.render_tables [--tag opt]
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+
+ART = os.path.join(os.path.dirname(__file__), "..", "experiments", "dryrun")
+ARTW = os.path.join(os.path.dirname(__file__), "..", "experiments",
+                    "dryrun_walk")
+
+
+def render(tag: str = "") -> str:
+    lines = ["| arch | shape | mesh | t_compute | t_memory | t_collective |"
+             " dominant | useful | fraction | mem/dev |",
+             "|---|---|---|---|---|---|---|---|---|---|"]
+    for path in sorted(glob.glob(os.path.join(ART, "*.json"))):
+        base = os.path.basename(path)[:-5]
+        parts = base.split("__")
+        t = parts[3] if len(parts) > 3 else ""
+        if t != tag:
+            continue
+        a = json.load(open(path))
+        if a.get("status") == "skipped":
+            lines.append(f"| {a['arch']} | {a['shape']} | {a['mesh']} | "
+                         f"— skipped: {a['reason'][:58]} | | | | | | |")
+            continue
+        mem = (a.get("memory") or {}).get("resident_bytes") or 0
+        lines.append(
+            f"| {a['arch']} | {a['shape']} | {a['mesh']} "
+            f"| {a['t_compute']:.3e} | {a['t_memory']:.3e} "
+            f"| {a['t_collective']:.3e} | {a['bottleneck']} "
+            f"| {a['useful_ratio']:.2f} | {a['roofline_fraction']:.4f} "
+            f"| {mem/2**30:.2f} GiB |")
+    return "\n".join(lines)
+
+
+def render_walk() -> str:
+    lines = ["| cell | cap | mode | capacity | flops/step/dev | "
+             "coll bytes/step/dev | t_compute | t_collective |",
+             "|---|---|---|---|---|---|---|---|"]
+    for path in sorted(glob.glob(os.path.join(ARTW, "*.json"))):
+        a = json.load(open(path))
+        lines.append(
+            f"| {a['cell']} | {a['cap']} | {a['mode']} | {a['capacity']} "
+            f"| {a['flops_per_step_per_dev']:.2e} "
+            f"| {a['coll_bytes_per_step_per_dev']/2**20:.1f} MiB "
+            f"| {a['t_compute']:.2e} | {a['t_collective']:.2e} |")
+    return "\n".join(lines)
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--tag", default="")
+    ap.add_argument("--walk", action="store_true")
+    args = ap.parse_args()
+    print(render_walk() if args.walk else render(args.tag))

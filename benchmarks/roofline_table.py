@@ -1,0 +1,53 @@
+"""Deliverable (g): the roofline table over every (arch x shape x mesh)
+dry-run artifact. Reads experiments/dryrun/*.json; prints the three terms,
+bottleneck, useful-compute ratio and roofline fraction per cell."""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+from benchmarks.common import row
+
+ART_DIR = os.path.join(os.path.dirname(__file__), "..", "experiments",
+                       "dryrun")
+
+
+def load_artifacts(mesh: str | None = None, tag: str | None = None):
+    arts = []
+    for path in sorted(glob.glob(os.path.join(ART_DIR, "*.json"))):
+        base = os.path.basename(path)[:-5]
+        parts = base.split("__")
+        if tag is None and len(parts) > 3:
+            continue
+        if tag is not None and (len(parts) < 4 or parts[3] != tag):
+            continue
+        with open(path) as f:
+            arts.append(json.load(f))
+    if mesh:
+        arts = [a for a in arts if a.get("mesh") == mesh]
+    return arts
+
+
+def run():
+    arts = load_artifacts()
+    n_ok = n_skip = 0
+    for a in arts:
+        name = f"roofline_{a['arch']}_{a['shape']}_{a['mesh']}"
+        if a.get("status") == "skipped":
+            n_skip += 1
+            row(name, 0.0, "skipped=" + a["reason"][:50].replace(",", ";"))
+            continue
+        n_ok += 1
+        dom = a["bottleneck"]
+        us = max(a["t_compute"], a["t_memory"], a["t_collective"]) * 1e6
+        row(name, us,
+            f"tc={a['t_compute']:.3e};tm={a['t_memory']:.3e};"
+            f"tx={a['t_collective']:.3e};dom={dom};"
+            f"useful={a['useful_ratio']:.2f};"
+            f"frac={a['roofline_fraction']:.4f}")
+    row("roofline_summary", 0.0, f"cells_ok={n_ok};cells_skipped={n_skip}")
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,41 @@
+"""Benchmark harness — one module per paper table/figure (see DESIGN.md §9).
+Prints ``name,us_per_call,derived`` CSV."""
+from __future__ import annotations
+
+import sys
+import traceback
+
+
+def main() -> None:
+    from benchmarks import (bench_accuracy, bench_breakdown,
+                            bench_efficiency, bench_growth, bench_memory,
+                            bench_scaling, bench_skew, bench_wec,
+                            roofline_table)
+    print("name,us_per_call,derived")
+    suites = [
+        ("breakdown (Fig.1)", bench_breakdown),
+        ("memory (Eq.1)", bench_memory),
+        ("message growth (Fig.4/5)", bench_growth),
+        ("efficiency (Fig.7/8)", bench_efficiency),
+        ("scaling ER-K (Fig.9)", bench_scaling),
+        ("WeC-K (Fig.10/11)", bench_wec),
+        ("Skew-S (Fig.5/12/13/14)", bench_skew),
+        ("accuracy (Fig.6)", bench_accuracy),
+        ("roofline table (dry-run)", roofline_table),
+    ]
+    failed = []
+    for name, mod in suites:
+        print(f"# --- {name} ---", flush=True)
+        try:
+            mod.run()
+        except Exception:
+            failed.append(name)
+            traceback.print_exc()
+    if failed:
+        print(f"# FAILED suites: {failed}")
+        sys.exit(1)
+    print("# all benchmark suites completed")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,43 @@
+"""Node classification (the paper's Fig. 6 experiment, end to end).
+
+Trains Node2Vec embeddings on a labeled community graph three ways — exact,
+FN-Approx, and the Spark trim baseline — then fits a linear probe and prints
+micro-F1 for each, reproducing the paper's quality ranking:
+exact ≈ approx >> spark-trim.
+
+    PYTHONPATH=src python examples/classify_nodes.py
+"""
+import numpy as np
+
+from repro.core import rmat
+from repro.core.node2vec import (Node2VecConfig, generate_walks,
+                                 train_embeddings)
+
+graph, labels = rmat.sbm_labeled(n=400, num_communities=4, p_in=0.06,
+                                 p_out=0.004, seed=1)
+rng = np.random.default_rng(0)
+graph.wgt = (rng.random(graph.m) * 4 + 0.5).astype(np.float32)
+print(f"graph: {graph.n} vertices, {graph.m} edges, 4 communities")
+
+
+def probe_accuracy(emb):
+    idx = np.random.default_rng(0).permutation(graph.n)
+    tr, te = idx[:graph.n // 2], idx[graph.n // 2:]
+    y = np.eye(4)[labels]
+    w, *_ = np.linalg.lstsq(emb[tr], y[tr], rcond=None)
+    return ((emb[te] @ w).argmax(1) == labels[te]).mean()
+
+
+base = dict(p=1.0, q=0.5, walk_length=20, num_walks=4, window=5, dim=32,
+            epochs=2, batch_size=4096, seed=0)
+
+for name, g, cfg in [
+    ("fn_exact", graph, Node2VecConfig(mode="exact", **base)),
+    ("fn_approx", graph, Node2VecConfig(mode="approx", approx_eps=5e-2,
+                                        cap=16, **base)),
+    ("spark_trim", graph.trim_top_weights(4),
+     Node2VecConfig(mode="exact", **base)),
+]:
+    walks = generate_walks(g, cfg)
+    emb = train_embeddings(g, walks, cfg)
+    print(f"{name:12s} micro-F1 = {probe_accuracy(emb):.3f}")

@@ -1,0 +1,89 @@
+"""Architecture registry.
+
+Config files are named with the *exact* assigned architecture ids (which
+contain dots and dashes, e.g. ``jamba-v0.1-52b.py``), so they are loaded via
+importlib rather than as package modules.
+
+    get_config("yi-6b")           -> full ModelConfig
+    smoke_config("yi-6b")         -> reduced same-family config (CPU tests)
+    input_specs(cfg, "train_4k")  -> ShapeDtypeStruct stand-ins for jit.lower
+"""
+from __future__ import annotations
+
+import importlib.util
+import os
+from typing import Dict, List
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import SHAPES, shape_applicable, smoke_reduce
+from repro.models.config import ModelConfig
+
+_DIR = os.path.dirname(__file__)
+_EXCLUDE = {"__init__.py", "base.py"}
+
+
+def list_archs() -> List[str]:
+    names = []
+    for fn in sorted(os.listdir(_DIR)):
+        if fn.endswith(".py") and fn not in _EXCLUDE:
+            names.append(fn[:-3])
+    return names
+
+
+def _load(arch: str):
+    path = os.path.join(_DIR, arch + ".py")
+    if not os.path.exists(path):
+        raise KeyError(f"unknown arch {arch!r}; known: {list_archs()}")
+    spec = importlib.util.spec_from_file_location(
+        "repro_config_" + arch.replace(".", "_").replace("-", "_"), path)
+    mod = importlib.util.module_from_spec(spec)
+    spec.loader.exec_module(mod)
+    return mod
+
+
+def get_config(arch: str) -> ModelConfig:
+    return _load(arch).CONFIG
+
+
+def smoke_config(arch: str) -> ModelConfig:
+    return smoke_reduce(get_config(arch))
+
+
+def input_specs(cfg: ModelConfig, shape: str, batch: int | None = None,
+                seq: int | None = None) -> Dict:
+    """ShapeDtypeStruct stand-ins for every model input of the given shape
+    cell (weak-type-correct, shardable, no device allocation).
+
+    Returns {"kind": train|prefill|decode, "batch": {...specs...},
+             "seq": S, "global_batch": B}.
+    """
+    info = SHAPES[shape]
+    b = batch or info["batch"]
+    s = seq or info["seq"]
+    kind = info["kind"]
+    i32 = jnp.int32
+    dt = jnp.dtype(cfg.dtype)
+    specs: Dict[str, jax.ShapeDtypeStruct] = {}
+    if kind in ("train", "prefill"):
+        specs["tokens"] = jax.ShapeDtypeStruct((b, s), i32)
+        if kind == "train":
+            specs["labels"] = jax.ShapeDtypeStruct((b, s), i32)
+        if cfg.enc_layers:
+            specs["frames"] = jax.ShapeDtypeStruct(
+                (b, cfg.num_audio_frames, cfg.d_model), dt)
+        if cfg.cross_every and not cfg.enc_layers:
+            specs["patches"] = jax.ShapeDtypeStruct(
+                (b, cfg.num_image_tokens, cfg.d_model), dt)
+    else:  # decode: one new token against a seq-long cache
+        specs["token"] = jax.ShapeDtypeStruct((b,), i32)
+        specs["pos"] = jax.ShapeDtypeStruct((), i32)
+    return {"kind": kind, "batch": specs, "seq": s, "global_batch": b}
+
+
+def applicable(cfg: ModelConfig, shape: str):
+    return shape_applicable(cfg, shape)
+
+
+SHAPE_NAMES = list(SHAPES.keys())

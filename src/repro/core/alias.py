@@ -1,0 +1,82 @@
+"""Vose alias method [Vose'91] — O(1) sampling from a static distribution.
+
+The paper uses 8-byte alias entries for transition probabilities (Eq. 1); we
+keep the same layout (f32 prob + i32 companion = 8 B/slot) but *only* build the
+1st-order table (O(E) total), never the O(sum d_i^2) 2nd-order tables — the
+central memory-saving claim of Fast-Node2Vec.
+
+``build_alias_rows`` is the host-side (numpy) batch builder over padded weight
+rows; ``alias_sample`` is the device-side O(1) draw used by the walk engines
+for (a) step 0 and (b) the FN-Approx fast path at popular vertices.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def build_alias(w: np.ndarray):
+    """Classic Vose construction for one row. Returns (prob[f32], alias[i32])."""
+    k = len(w)
+    prob = np.zeros(k, dtype=np.float32)
+    alias = np.zeros(k, dtype=np.int32)
+    if k == 0:
+        return prob, alias
+    total = float(w.sum())
+    if total <= 0:
+        prob[:] = 1.0
+        alias[:] = np.arange(k)
+        return prob, alias
+    scaled = w.astype(np.float64) * (k / total)
+    small = [i for i in range(k) if scaled[i] < 1.0]
+    large = [i for i in range(k) if scaled[i] >= 1.0]
+    while small and large:
+        s, l = small.pop(), large.pop()
+        prob[s] = scaled[s]
+        alias[s] = l
+        scaled[l] = (scaled[l] + scaled[s]) - 1.0
+        (small if scaled[l] < 1.0 else large).append(l)
+    for i in large + small:
+        prob[i] = 1.0
+        alias[i] = i
+    return prob, alias
+
+
+def build_alias_rows(wrows: np.ndarray):
+    """Batched Vose over padded weight rows ``[R, D]`` (0-padded, pads strictly
+    trailing). Each table is built over exactly the row's ``deg`` live slots,
+    so draws use ``width = deg`` — making alias sampling independent of the
+    padded layout (FN-Base vs FN-Cache produce bit-identical walks)."""
+    wrows = np.asarray(wrows, dtype=np.float64)
+    r, d = wrows.shape
+    prob = np.zeros((r, d), dtype=np.float32)
+    alias = np.zeros((r, d), dtype=np.int32)
+    if r == 0 or d == 0:
+        return prob, alias
+    live = (wrows > 0).sum(axis=1)
+    for i in np.nonzero(live > 0)[0]:
+        k = int(live[i])
+        p, a = build_alias(wrows[i, :k])
+        prob[i, :k], alias[i, :k] = p, a
+    return prob, alias
+
+
+def alias_sample(key: jax.Array, prob_row: jnp.ndarray,
+                 alias_row: jnp.ndarray, width=None) -> jnp.ndarray:
+    """O(1) alias draw over a padded row.
+
+    Tables are built over exactly the row's live degree, so pass
+    ``width = deg(v)`` (layout-independent). Returns the sampled *slot index*
+    (caller maps the slot to a neighbor id).
+    """
+    k1, k2 = jax.random.split(key)
+    if width is None:
+        width = prob_row.shape[-1]
+    width = jnp.maximum(jnp.asarray(width, jnp.int32), 1)
+    slot = jnp.minimum(
+        (jax.random.uniform(k1) * width.astype(jnp.float32)).astype(jnp.int32),
+        width - 1)
+    u = jax.random.uniform(k2)
+    take_alias = u >= prob_row[slot]
+    return jnp.where(take_alias, alias_row[slot], slot)

@@ -1,0 +1,81 @@
+"""Skip-gram with negative sampling (SGNS) — Node2Vec stage 2.
+
+The paper focuses on the walk stage (98.8% of Spark runtime) but a complete
+system needs the optimization stage too: this is the standard word2vec SGNS
+objective [Mikolov'13] applied to walk corpora [Grover & Leskovec'16]:
+
+    L = -log sigma(u_c . v_p) - sum_k log sigma(-u_c . v_nk)
+
+Embedding tables are sharded over the ``model`` mesh axis on the vocab
+(vertex) dimension so billion-vertex graphs scale: each device holds V/TP
+rows; gathers/scatter-grads lower to collectives under pjit.
+
+The fused forward/backward inner product is also available as a Pallas TPU
+kernel (``repro.kernels.sgns``); this module is the pure-jnp reference path
+used for CPU tests and as the kernel oracle.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.optim.optimizers import Optimizer, apply_updates
+
+
+@dataclasses.dataclass(frozen=True)
+class SGNSConfig:
+    vocab: int
+    dim: int = 128
+    negatives: int = 5
+    param_dtype: Any = jnp.float32
+
+
+def init_params(cfg: SGNSConfig, key: jax.Array) -> Dict[str, jnp.ndarray]:
+    k1, _ = jax.random.split(key)
+    scale = 1.0 / jnp.sqrt(cfg.dim)
+    return {
+        "emb_in": (jax.random.uniform(k1, (cfg.vocab, cfg.dim),
+                                      cfg.param_dtype) - 0.5) * 2 * scale,
+        "emb_out": jnp.zeros((cfg.vocab, cfg.dim), cfg.param_dtype),
+    }
+
+
+def log_sigmoid(x):
+    return -jnp.logaddexp(0.0, -x)
+
+
+def sgns_loss(params, center: jnp.ndarray, pos: jnp.ndarray,
+              negs: jnp.ndarray, valid: Optional[jnp.ndarray] = None):
+    """Batch SGNS loss. center/pos: [B]; negs: [B, K]; valid: [B] mask."""
+    ci = params["emb_in"][center]            # [B, D]
+    po = params["emb_out"][pos]              # [B, D]
+    no = params["emb_out"][negs]             # [B, K, D]
+    pos_score = jnp.sum(ci * po, axis=-1)
+    neg_score = jnp.einsum("bd,bkd->bk", ci, no)
+    per = -(log_sigmoid(pos_score) + jnp.sum(log_sigmoid(-neg_score), -1))
+    if valid is None:
+        return jnp.mean(per)
+    denom = jnp.maximum(jnp.sum(valid), 1.0)
+    return jnp.sum(per * valid) / denom
+
+
+@functools.partial(jax.jit, static_argnames=("opt",), donate_argnums=(0, 1))
+def train_step(params, opt_state, batch, opt: Optimizer):
+    def loss_fn(p):
+        return sgns_loss(p, batch["center"], batch["pos"], batch["neg"],
+                         batch.get("valid"))
+
+    loss, grads = jax.value_and_grad(loss_fn)(params)
+    updates, opt_state = opt.update(grads, opt_state, params)
+    params = apply_updates(params, updates)
+    return params, opt_state, loss
+
+
+def normalize_embeddings(params) -> jnp.ndarray:
+    e = params["emb_in"].astype(jnp.float32)
+    return e / (jnp.linalg.norm(e, axis=-1, keepdims=True) + 1e-8)

@@ -1,0 +1,152 @@
+"""Single-device reference walk engine (FN-Base / FN-Cache / FN-Approx).
+
+This is the executable specification of the paper's Algorithm 1 and its
+optimizations, fully vectorized over walkers with a ``lax.scan`` over
+supersteps (one scan iteration == one Pregel superstep; the BSP barrier is
+implicit in SPMD dataflow).
+
+RNG discipline: the key for walker ``i`` at step ``s`` is
+``fold_in(fold_in(seed, i), s)`` — a pure function of (walker, step), never of
+device layout. The distributed engine therefore produces **bit-identical**
+walks (tested), which is how we validate the multi-device implementation
+against this reference.
+
+Modes:
+  * ``exact``  — full 2nd-order sampling everywhere (FN-Base / FN-Cache;
+    which one you get is a property of the PaddedGraph layout: cap == max
+    degree -> FN-Base, cap < max degree + hot cache -> FN-Cache).
+  * ``approx`` — FN-Approx: at a popular (hot) vertex v reached from an
+    unpopular u, if the Eq. 2-3 bound gap < eps, sample from the *static*
+    1st-order alias table: O(1) instead of O(deg) (paper §3.4).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.alias import alias_sample
+from repro.core.graph import PAD_ID, PaddedGraph
+from repro.core.transition import approx_gap, sample_slot, unnormalized_probs
+
+
+@dataclasses.dataclass(frozen=True)
+class WalkParams:
+    p: float = 1.0
+    q: float = 1.0
+    length: int = 80
+    mode: str = "exact"          # "exact" | "approx"
+    approx_eps: float = 1e-3
+
+
+def walker_key(seed_key: jax.Array, walker_id: jnp.ndarray,
+               step: jnp.ndarray) -> jax.Array:
+    """Layout-independent per-(walker, step) key."""
+    return jax.random.fold_in(jax.random.fold_in(seed_key, walker_id), step)
+
+
+def unified_row(pg: PaddedGraph, v: jnp.ndarray):
+    """Full-width (max(cap, hot_cap)) row lookup for one vertex id.
+
+    Returns (ids, w, alias_p, alias_i, is_hot). Hot vertices read the
+    replicated hot cache (exact, full degree); cold vertices read the capped
+    local row. Output width is hot_cap (>= cap), pads appended.
+    """
+    hpos = pg.hot_pos[v]
+    is_hot = hpos >= 0
+    h = jnp.maximum(hpos, 0)
+    width = pg.hot_cap
+
+    def padded(x, fill):
+        pad = jnp.full((width - pg.cap,), fill, x.dtype)
+        return jnp.concatenate([x, pad])
+
+    cold_ids = padded(pg.adj[v], PAD_ID)
+    cold_w = padded(pg.wgt[v], 0.0)
+    cold_ap = padded(pg.alias_p[v], 0.0)
+    cold_ai = padded(pg.alias_i[v], 0)
+    ids = jnp.where(is_hot, pg.hot_adj[h], cold_ids)
+    w = jnp.where(is_hot, pg.hot_wgt[h], cold_w)
+    ap = jnp.where(is_hot, pg.hot_alias_p[h], cold_ap)
+    ai = jnp.where(is_hot, pg.hot_alias_i[h], cold_ai)
+    return ids, w, ap, ai, is_hot
+
+
+def _first_step(pg: PaddedGraph, v: jnp.ndarray, key: jax.Array):
+    """Step 0: 1st-order draw from static edge weights via the alias table."""
+    ids, _, ap, ai, _ = unified_row(pg, v)
+    slot = alias_sample(key, ap, ai, pg.deg[v])
+    nxt = ids[slot]
+    return jnp.where(pg.deg[v] > 0, nxt, v)
+
+
+def _second_order_step(pg: PaddedGraph, u: jnp.ndarray, v: jnp.ndarray,
+                       prev_ids: jnp.ndarray, key: jax.Array,
+                       params: WalkParams):
+    """One 2nd-order move for one walker. Returns (next_id, v_row_ids)."""
+    ids, w, ap, ai, is_hot = unified_row(pg, v)
+    probs = unnormalized_probs(ids, w, u, prev_ids, params.p, params.q)
+    k_exact, k_approx = jax.random.split(key)
+    exact_slot = sample_slot(k_exact, probs)
+    if params.mode == "approx":
+        gap = approx_gap(pg.deg[u], pg.deg[v], pg.w_min[v], pg.w_max[v],
+                         params.p, params.q)
+        u_hot = pg.hot_pos[u] >= 0
+        use_approx = is_hot & (~u_hot) & (gap < params.approx_eps)
+        approx_slot = alias_sample(k_approx, ap, ai, pg.deg[v])
+        slot = jnp.where(use_approx, approx_slot, exact_slot)
+    elif params.mode == "approx_always":
+        # beyond-paper: hot vertices always take the O(1) alias path
+        # (semantics mirror of walk_distributed; quality measured in
+        # benchmarks/bench_accuracy)
+        approx_slot = alias_sample(k_approx, ap, ai, pg.deg[v])
+        slot = jnp.where(is_hot, approx_slot, exact_slot)
+    else:
+        slot = exact_slot
+    nxt = ids[slot]
+    nxt = jnp.where(pg.deg[v] > 0, nxt, v)  # dead end: stay
+    return nxt, ids
+
+
+@functools.partial(jax.jit, static_argnames=("params", "length"))
+def _simulate(pg: PaddedGraph, starts: jnp.ndarray, walker_ids: jnp.ndarray,
+              seed_key: jax.Array, params: WalkParams, length: int):
+    w = starts.shape[0]
+
+    k0 = jax.vmap(lambda i: walker_key(seed_key, i, 0))(walker_ids)
+    v1 = jax.vmap(lambda v, k: _first_step(pg, v, k))(starts, k0)
+    prev_ids0 = jax.vmap(lambda v: unified_row(pg, v)[0])(starts)
+
+    def body(carry, s):
+        u, v, prev_ids = carry
+        ks = jax.vmap(lambda i: walker_key(seed_key, i, s))(walker_ids)
+        nxt, v_ids = jax.vmap(
+            lambda uu, vv, pr, kk: _second_order_step(pg, uu, vv, pr, kk,
+                                                      params))(
+                u, v, prev_ids, ks)
+        return (v, nxt, v_ids), v
+
+    (_, v_last, _), steps = jax.lax.scan(
+        body, (starts, v1, prev_ids0), jnp.arange(1, length, dtype=jnp.int32))
+    # walks[:, 0] = first sampled step, then one column per later step
+    walks = jnp.concatenate(
+        [steps.T, v_last[:, None]], axis=1) if length > 1 else v1[:, None]
+    return walks
+
+
+def simulate_walks(pg: PaddedGraph, starts: jnp.ndarray, seed: int,
+                   params: WalkParams,
+                   walker_ids: Optional[jnp.ndarray] = None) -> jnp.ndarray:
+    """Simulate ``len(starts)`` biased walks of ``params.length`` steps.
+
+    Returns [W, length] i32: the sampled steps (excluding the start vertex,
+    matching Algorithm 1 which stores step[0] = first sampled move).
+    """
+    starts = jnp.asarray(starts, jnp.int32)
+    if walker_ids is None:
+        walker_ids = jnp.arange(starts.shape[0], dtype=jnp.int32)
+    key = jax.random.PRNGKey(seed)
+    return _simulate(pg, starts, walker_ids, key, params, params.length)

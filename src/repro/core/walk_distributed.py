@@ -1,0 +1,351 @@
+"""Distributed Fast-Node2Vec walk engine (shard_map over the device mesh).
+
+Pregel -> TPU-SPMD mapping (see DESIGN.md §2):
+
+* One Pregel **superstep** == one iteration of a ``lax.scan``; the BSP barrier
+  is the collective itself.
+* The graph is **range-partitioned** by vertex id across the flattened mesh
+  axis ``rw`` (all devices of the production mesh). Walkers are co-located
+  with their start vertex, so the paper's STEP messages (sampled step sent
+  back to the start vertex) become *local buffer writes* — zero traffic.
+* The paper's NEIG message (neighbor list of the current vertex) becomes a
+  **pull**: a two-phase ``all_to_all`` — request ids out, neighbor rows back.
+  - FN-Local: the diagonal block of the all_to_all never crosses ICI, and
+    fully-local requests skip the exchange entirely.
+  - FN-Cache: rows of every vertex with degree > cap are replicated in the
+    hot cache, so popular vertices never enter the exchange and the payload
+    width is the *cold* cap, not the max degree. This is the statically
+    visible collective-bytes reduction measured in the roofline.
+  - FN-Approx: at a hot v reached from a cold u, if the Eq. 2-3 gap < eps the
+    step is an O(1) alias draw from the replicated table — no wide prob row.
+* The NEIG payload for the *next* step's dist(u, x) test is the row we just
+  fetched — carried in walker state (Algorithm 1 line 22), cold width only;
+  hot prev rows are re-read from the replicated cache at compute time.
+
+RNG keys are ``fold_in(seed, global_walker_id, step)`` — identical to the
+single-device reference, so distributed walks are **bit-identical** to
+``repro.core.walk.simulate_walks`` (validated in tests).
+
+Capacity: the request exchange has a static per-destination capacity ``C``.
+Requests beyond C are *dropped* (walker stays put for that step) and counted
+in the returned diagnostics; exact-mode callers size C so drops are zero
+(tests assert this). The paper's FN-Multi (walker rounds) is the production
+lever for bounding C — see ``runtime/fault_tolerance.py``.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.core.alias import alias_sample
+from repro.core.graph import PAD_ID, PaddedGraph
+from repro.core.transition import (approx_gap, sample_slot,
+                                   unnormalized_probs)
+from repro.core.walk import WalkParams, walker_key
+
+RW_AXIS = "rw"
+
+
+@functools.partial(
+    jax.tree_util.register_dataclass,
+    data_fields=["adj", "wgt", "alias_p", "alias_i", "deg", "hot_ids",
+                 "hot_adj", "hot_wgt", "hot_alias_p", "hot_alias_i",
+                 "hot_deg", "hot_wmin", "hot_wmax"],
+    meta_fields=["n", "n_orig", "num_shards", "cap", "hot_cap"])
+@dataclasses.dataclass
+class ShardedGraph:
+    """Host-built container of device-ready arrays for the sharded engine.
+
+    Row-sharded over ``rw``: adj, wgt, alias_p, alias_i, deg.
+    Replicated: hot arrays + per-hot-vertex scalars.
+    """
+    n: int            # padded vertex count (multiple of num_shards)
+    n_orig: int
+    num_shards: int
+    cap: int
+    hot_cap: int
+    adj: jnp.ndarray          # [n, cap]
+    wgt: jnp.ndarray          # [n, cap]
+    alias_p: jnp.ndarray      # [n, cap]
+    alias_i: jnp.ndarray      # [n, cap]
+    deg: jnp.ndarray          # [n]
+    hot_ids: jnp.ndarray      # [K] sorted ascending
+    hot_adj: jnp.ndarray      # [K, hot_cap]
+    hot_wgt: jnp.ndarray      # [K, hot_cap]
+    hot_alias_p: jnp.ndarray  # [K, hot_cap]
+    hot_alias_i: jnp.ndarray  # [K, hot_cap]
+    hot_deg: jnp.ndarray      # [K]
+    hot_wmin: jnp.ndarray     # [K]
+    hot_wmax: jnp.ndarray     # [K]
+
+    @property
+    def n_local(self) -> int:
+        return self.n // self.num_shards
+
+    @staticmethod
+    def build(pg: PaddedGraph, num_shards: int) -> "ShardedGraph":
+        n_pad = ((pg.n + num_shards - 1) // num_shards) * num_shards
+
+        def pad_rows(x, fill):
+            if n_pad == pg.n:
+                return x
+            pad = jnp.full((n_pad - pg.n,) + x.shape[1:], fill, x.dtype)
+            return jnp.concatenate([x, pad], axis=0)
+
+        hot_deg = pg.deg[pg.hot_ids]
+        hot_wmin = pg.w_min[pg.hot_ids]
+        hot_wmax = pg.w_max[pg.hot_ids]
+        return ShardedGraph(
+            n=n_pad, n_orig=pg.n, num_shards=num_shards, cap=pg.cap,
+            hot_cap=pg.hot_cap,
+            adj=pad_rows(pg.adj, PAD_ID), wgt=pad_rows(pg.wgt, 0.0),
+            alias_p=pad_rows(pg.alias_p, 1.0),
+            alias_i=pad_rows(pg.alias_i, 0),
+            deg=pad_rows(pg.deg, 0),
+            hot_ids=pg.hot_ids, hot_adj=pg.hot_adj, hot_wgt=pg.hot_wgt,
+            hot_alias_p=pg.hot_alias_p, hot_alias_i=pg.hot_alias_i,
+            hot_deg=hot_deg, hot_wmin=hot_wmin, hot_wmax=hot_wmax)
+
+
+def _hot_lookup(hot_ids: jnp.ndarray, v: jnp.ndarray):
+    """Replicated hot-set membership: (is_hot, position)."""
+    k = hot_ids.shape[0]
+    pos = jnp.minimum(jnp.searchsorted(hot_ids, v), k - 1)
+    return hot_ids[pos] == v, pos
+
+
+def _bucket_requests(dest: jnp.ndarray, needs_remote: jnp.ndarray,
+                     v: jnp.ndarray, num_shards: int, capacity: int):
+    """Pack remote requests into per-destination slots of width ``capacity``.
+
+    Returns (buf [S*C] request ids, slot_of_walker [W] (-1 if none), dropped
+    mask [W]). Deterministic: walkers are ranked by (dest, walker order).
+    """
+    w = dest.shape[0]
+    sort_key = jnp.where(needs_remote, dest, num_shards)
+    order = jnp.argsort(sort_key, stable=True)
+    sorted_key = sort_key[order]
+    first = jnp.searchsorted(sorted_key, sorted_key, side="left")
+    rank_sorted = jnp.arange(w, dtype=jnp.int32) - first.astype(jnp.int32)
+    rank = jnp.zeros_like(rank_sorted).at[order].set(rank_sorted)
+    ok = needs_remote & (rank < capacity)
+    size = num_shards * capacity
+    # slot==size is a scratch lane for every non-request; sliced off below.
+    slot = jnp.where(ok, dest * capacity + rank, size)
+    buf = jnp.full((size + 1,), PAD_ID, jnp.int32)
+    buf = buf.at[slot].set(v)[:size]
+    slot = jnp.where(ok, slot, -1)
+    dropped = needs_remote & ~ok
+    return buf, slot, dropped
+
+
+def _serve_requests(g: ShardedGraph, adj, wgt, recv_ids: jnp.ndarray,
+                    shard_offset: jnp.ndarray):
+    """Gather local rows for incoming request ids [R]. PAD_ID -> pad row."""
+    local = jnp.clip(recv_ids - shard_offset, 0, adj.shape[0] - 1)
+    valid = recv_ids != PAD_ID
+    ids = jnp.where(valid[:, None], adj[local], PAD_ID)
+    w = jnp.where(valid[:, None], wgt[local], 0.0)
+    return ids, w
+
+
+def _widen(x: jnp.ndarray, width: int, fill) -> jnp.ndarray:
+    d = x.shape[-1]
+    if d >= width:
+        return x
+    pad = jnp.full(x.shape[:-1] + (width - d,), fill, x.dtype)
+    return jnp.concatenate([x, pad], axis=-1)
+
+
+def _sharded_step(g: ShardedGraph, adj, wgt, alias_p, alias_i, deg,
+                  u, v, prev_ids, prev_deg, step, seed_key, walker_ids,
+                  params: WalkParams, capacity: int):
+    """One superstep for the local walker block (runs inside shard_map)."""
+    num_shards = g.num_shards
+    n_local = adj.shape[0]
+    my_shard = jax.lax.axis_index(RW_AXIS)
+    shard_offset = my_shard.astype(jnp.int32) * n_local
+
+    is_hot_v, hot_pos_v = _hot_lookup(g.hot_ids, v)
+    dest = (v // n_local).astype(jnp.int32)
+    is_local = dest == my_shard
+    needs_remote = (~is_hot_v) & (~is_local)
+
+    # --- NEIG pull: two-phase all_to_all (request ids, response rows) ---
+    buf, slot, dropped = _bucket_requests(dest, needs_remote, v, num_shards,
+                                          capacity)
+    req = buf.reshape(num_shards, capacity)
+    recv = jax.lax.all_to_all(req, RW_AXIS, split_axis=0, concat_axis=0,
+                              tiled=True)
+    rows_i, rows_w = _serve_requests(g, adj, wgt, recv.reshape(-1),
+                                     shard_offset)
+    rows_i = rows_i.reshape(num_shards, capacity, g.cap)
+    rows_w = rows_w.reshape(num_shards, capacity, g.cap)
+    resp_i = jax.lax.all_to_all(rows_i, RW_AXIS, 0, 0, tiled=True)
+    resp_w = jax.lax.all_to_all(rows_w, RW_AXIS, 0, 0, tiled=True)
+    resp_i = resp_i.reshape(num_shards * capacity, g.cap)
+    resp_w = resp_w.reshape(num_shards * capacity, g.cap)
+
+    # --- assemble candidate rows per walker (local / remote / hot) ---
+    v_local_idx = jnp.clip(v - shard_offset, 0, n_local - 1)
+    local_i, local_w = adj[v_local_idx], wgt[v_local_idx]
+    safe_slot = jnp.maximum(slot, 0)
+    remote_i, remote_w = resp_i[safe_slot], resp_w[safe_slot]
+    use_remote = slot >= 0
+    cold_i = jnp.where(use_remote[:, None], remote_i, local_i)
+    cold_w = jnp.where(use_remote[:, None], remote_w, local_w)
+    hp = jnp.maximum(hot_pos_v, 0)
+    if params.mode == "approx_always":
+        # beyond-paper FN-Approx: popular vertices ALWAYS take the O(1)
+        # alias path, so the exact-prob pass runs at cold width only and the
+        # [W, hot_cap] candidate assembly disappears entirely (static shapes
+        # otherwise evaluate both branches — see EXPERIMENTS.md §Perf).
+        cand_i = _widen(cold_i, g.cap, PAD_ID)
+        cand_w = _widen(cold_w, g.cap, 0.0)
+    else:
+        cand_i = jnp.where(is_hot_v[:, None], g.hot_adj[hp],
+                           _widen(cold_i, g.hot_cap, PAD_ID))
+        cand_w = jnp.where(is_hot_v[:, None], g.hot_wgt[hp],
+                           _widen(cold_w, g.hot_cap, 0.0))
+
+    # --- previous row for dist(u, x): carried if cold, cache if hot ---
+    is_hot_u, hot_pos_u = _hot_lookup(g.hot_ids, u)
+    hpu = jnp.maximum(hot_pos_u, 0)
+    prev_row = jnp.where(is_hot_u[:, None], g.hot_adj[hpu],
+                         _widen(prev_ids, g.hot_cap, PAD_ID))
+    deg_u = jnp.where(is_hot_u, g.hot_deg[hpu], prev_deg)
+
+    # --- 2nd-order sampling (identical math to the reference engine) ---
+    keys = jax.vmap(lambda i: walker_key(seed_key, i, step))(walker_ids)
+    probs = jax.vmap(
+        lambda ci, cw, uu, pr: unnormalized_probs(ci, cw, uu, pr, params.p,
+                                                  params.q))(
+            cand_i, cand_w, u, prev_row)
+    k_exact = jax.vmap(lambda k: jax.random.split(k)[0])(keys)
+    k_approx = jax.vmap(lambda k: jax.random.split(k)[1])(keys)
+    slot_exact = jax.vmap(sample_slot)(k_exact, probs)
+    if params.mode == "approx":
+        deg_v_hot = g.hot_deg[hp]
+        gap = approx_gap(deg_u, deg_v_hot, g.hot_wmin[hp], g.hot_wmax[hp],
+                         params.p, params.q)
+        use_approx = is_hot_v & (~is_hot_u) & (gap < params.approx_eps)
+        slot_ap = jax.vmap(alias_sample)(k_approx, g.hot_alias_p[hp],
+                                         g.hot_alias_i[hp], g.hot_deg[hp])
+        pick = jnp.where(use_approx, slot_ap, slot_exact)
+        nxt = jnp.take_along_axis(cand_i, pick[:, None], axis=1)[:, 0]
+    elif params.mode == "approx_always":
+        slot_ap = jax.vmap(alias_sample)(k_approx, g.hot_alias_p[hp],
+                                         g.hot_alias_i[hp], g.hot_deg[hp])
+        nxt_hot = g.hot_adj[hp, slot_ap]       # [W] gather, O(1)/walker
+        nxt_cold = jnp.take_along_axis(cand_i, slot_exact[:, None],
+                                       axis=1)[:, 0]
+        nxt = jnp.where(is_hot_v, nxt_hot, nxt_cold)
+    else:
+        nxt = jnp.take_along_axis(cand_i, slot_exact[:, None], axis=1)[:, 0]
+    deg_v = jnp.sum(cand_w > 0, axis=1).astype(jnp.int32)
+    if params.mode == "approx_always":
+        deg_v = jnp.where(is_hot_v, g.hot_deg[hp], deg_v)
+    alive = (deg_v > 0) & ~dropped
+    nxt = jnp.where(alive, nxt, v)
+
+    # carried NEIG payload for the next step (cold width)
+    new_prev_ids = jnp.where(is_hot_v[:, None], PAD_ID, cold_i)
+    return nxt, new_prev_ids, deg_v, dropped
+
+
+def _first_step_local(g: ShardedGraph, adj, wgt, alias_p, alias_i, deg,
+                      starts, seed_key, walker_ids):
+    """Step 0: starts are local by construction; 1st-order alias draw."""
+    my_shard = jax.lax.axis_index(RW_AXIS)
+    n_local = adj.shape[0]
+    off = my_shard.astype(jnp.int32) * n_local
+    li = jnp.clip(starts - off, 0, n_local - 1)
+    is_hot, hp = _hot_lookup(g.hot_ids, starts)
+    hp = jnp.maximum(hp, 0)
+    ap = jnp.where(is_hot[:, None], g.hot_alias_p[hp],
+                   _widen(alias_p[li], g.hot_cap, 0.0))
+    ai = jnp.where(is_hot[:, None], g.hot_alias_i[hp],
+                   _widen(alias_i[li], g.hot_cap, 0))
+    ids = jnp.where(is_hot[:, None], g.hot_adj[hp],
+                    _widen(adj[li], g.hot_cap, PAD_ID))
+    keys = jax.vmap(lambda i: walker_key(seed_key, i, 0))(walker_ids)
+    slots = jax.vmap(alias_sample)(keys, ap, ai, deg[li])
+    nxt = jnp.take_along_axis(ids, slots[:, None], axis=1)[:, 0]
+    nxt = jnp.where(deg[li] > 0, nxt, starts)
+    prev_ids = adj[li]
+    prev_deg = deg[li]
+    return nxt, prev_ids, prev_deg
+
+
+def make_distributed_walk(g: ShardedGraph, mesh: Mesh, params: WalkParams,
+                          capacity: int, length: Optional[int] = None):
+    """Build the jitted distributed walk fn over ``mesh`` (all axes flattened
+    into the ``rw`` axis via an abstract mesh reshape is the caller's job —
+    this function expects a 1-D mesh with axis name 'rw')."""
+    length = length or params.length
+    pspec_rows = P(RW_AXIS)
+    rep = P()
+
+    def walk_body(adj, wgt, alias_p, alias_i, deg, hot_pack, starts,
+                  walker_ids, seed_key):
+        gl = dataclasses.replace(
+            g, hot_ids=hot_pack[0], hot_adj=hot_pack[1], hot_wgt=hot_pack[2],
+            hot_alias_p=hot_pack[3], hot_alias_i=hot_pack[4],
+            hot_deg=hot_pack[5], hot_wmin=hot_pack[6], hot_wmax=hot_pack[7])
+        v1, prev_ids, prev_deg = _first_step_local(
+            gl, adj, wgt, alias_p, alias_i, deg, starts, seed_key, walker_ids)
+
+        def body(carry, s):
+            u, v, p_ids, p_deg, drops = carry
+            nxt, np_ids, deg_v, dropped = _sharded_step(
+                gl, adj, wgt, alias_p, alias_i, deg, u, v, p_ids, p_deg, s,
+                seed_key, walker_ids, params, capacity)
+            drops = drops + jnp.sum(dropped.astype(jnp.int32))
+            return (v, nxt, np_ids, deg_v, drops), v
+
+        init = (starts, v1, prev_ids, prev_deg, jnp.zeros((), jnp.int32))
+        (_, v_last, _, _, drops), steps = jax.lax.scan(
+            body, init, jnp.arange(1, length, dtype=jnp.int32))
+        walks = jnp.concatenate([steps.T, v_last[:, None]], axis=1)
+        return walks, jax.lax.psum(drops, RW_AXIS)
+
+    shard_fn = jax.shard_map(
+        walk_body, mesh=mesh,
+        in_specs=(pspec_rows, pspec_rows, pspec_rows, pspec_rows, pspec_rows,
+                  rep, pspec_rows, pspec_rows, rep),
+        out_specs=(pspec_rows, rep),
+        check_vma=False)
+    return jax.jit(shard_fn)
+
+
+def distributed_walks(pg: PaddedGraph, mesh: Mesh, seed: int,
+                      params: WalkParams, capacity: Optional[int] = None,
+                      starts: Optional[np.ndarray] = None
+                      ) -> Tuple[jnp.ndarray, int]:
+    """Run walks for every vertex (or a round subset) on ``mesh``.
+
+    Returns (walks [W, length] i32, dropped_request_count). The walk rows for
+    padding vertices (id >= pg.n) are self-loops and should be ignored.
+    """
+    num_shards = int(np.prod([mesh.shape[a] for a in mesh.axis_names]))
+    g = ShardedGraph.build(pg, num_shards)
+    if starts is None:
+        starts = np.arange(g.n, dtype=np.int32)
+    starts = np.asarray(starts, np.int32)
+    assert starts.shape[0] % num_shards == 0, "walker count must shard evenly"
+    if capacity is None:
+        capacity = starts.shape[0] // num_shards  # safe default: zero drops
+    walker_ids = starts  # walker id == start vertex id (paper: 1 walk/vertex)
+    fn = make_distributed_walk(g, mesh, params, capacity)
+    hot_pack = (g.hot_ids, g.hot_adj, g.hot_wgt, g.hot_alias_p, g.hot_alias_i,
+                g.hot_deg, g.hot_wmin, g.hot_wmax)
+    key = jax.random.PRNGKey(seed)
+    walks, drops = fn(g.adj, g.wgt, g.alias_p, g.alias_i, g.deg, hot_pack,
+                      jnp.asarray(starts), jnp.asarray(walker_ids), key)
+    return walks, int(drops)

@@ -1,0 +1,104 @@
+"""Pallas TPU kernel: causal flash attention (forward).
+
+Addresses the dominant HBM-traffic term of the prefill/train cells
+(roofline/traffic.py ``attn_s2``): unfused attention writes+reads the
+[B, H, S, S] score/prob tensors (~12 bytes per element); the flash form keeps
+a [BQ, BK] tile in VMEM with an online-softmax running (max, denom), so HBM
+traffic collapses to one read of q/k/v and one write of o.
+
+Tiling: grid (B*H, S/BQ). For each q block, an inner ``fori_loop`` streams
+k/v blocks up to the causal frontier; the [BQ, BK] logits tile lives entirely
+in VMEM. Supports causal masking and sliding windows (mixtral SWA).
+
+Layout contract (ops.py pads/reshapes from the model's [B, S, H, dh]):
+  q   [BH, S, dh]   (GQA: kv already expanded to H by the wrapper)
+  k   [BH, S, dh]
+  v   [BH, S, dh]
+  out [BH, S, dh]
+S % BQ == 0, dh % 128 == 0 (pad), BQ == BK.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NEG_INF = -1e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, *, block: int, seq: int,
+                  window: int, causal: bool, sm_scale: float):
+    qi = pl.program_id(1)
+    q = q_ref[...].astype(jnp.float32)                 # [BQ, dh]
+    q = q * sm_scale
+
+    m0 = jnp.full((block, 1), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((block, 1), jnp.float32)
+    acc0 = jnp.zeros((block, q.shape[-1]), jnp.float32)
+
+    q_start = qi * block
+    # causal frontier: only k blocks with start <= q_end participate
+    num_kb = seq // block
+    last_kb = jnp.minimum(((q_start + block - 1) // block) + 1,
+                          num_kb) if causal else num_kb
+    # sliding window lower bound
+    first_kb = (jnp.maximum((q_start - window + 1) // block, 0)
+                if window else 0)
+
+    def body(kb, carry):
+        m, l, acc = carry
+        k_start = kb * block
+        k = k_ref[pl.dslice(k_start, block), :].astype(jnp.float32)
+        v = v_ref[pl.dslice(k_start, block), :].astype(jnp.float32)
+        s = q @ k.T                                    # [BQ, BK]
+        qpos = q_start + jax.lax.broadcasted_iota(jnp.int32, (block, block),
+                                                  0)
+        kpos = k_start + jax.lax.broadcasted_iota(jnp.int32, (block, block),
+                                                  1)
+        ok = jnp.ones((block, block), jnp.bool_)
+        if causal:
+            ok &= kpos <= qpos
+        if window:
+            ok &= kpos > qpos - window
+        s = jnp.where(ok, s, NEG_INF)
+        m_new = jnp.maximum(m, jnp.max(s, axis=-1, keepdims=True))
+        p = jnp.exp(s - m_new)
+        alpha = jnp.exp(m - m_new)
+        l_new = l * alpha + jnp.sum(p, axis=-1, keepdims=True)
+        acc_new = acc * alpha + p @ v
+        return m_new, l_new, acc_new
+
+    m, l, acc = jax.lax.fori_loop(first_kb, last_kb, body, (m0, l0, acc0))
+    o_ref[...] = (acc / jnp.maximum(l, 1e-30)).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("block", "window", "causal",
+                                             "interpret", "sm_scale"))
+def flash_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+                    block: int = 128, window: int = 0, causal: bool = True,
+                    interpret: bool = False,
+                    sm_scale: float | None = None) -> jnp.ndarray:
+    """q/k/v [BH, S, dh] -> out [BH, S, dh]. Pass ``sm_scale`` when dh is
+    padded (the scale must use the TRUE head dim)."""
+    bh, s, dh = q.shape
+    assert s % block == 0 and dh % 128 == 0, (s, dh)
+    grid = (bh, s // block)
+    if sm_scale is None:
+        sm_scale = dh ** -0.5
+    kernel = functools.partial(_flash_kernel, block=block, seq=s,
+                               window=window, causal=causal,
+                               sm_scale=sm_scale)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((None, block, dh), lambda b, i: (b, i, 0)),
+            pl.BlockSpec((None, s, dh), lambda b, i: (b, 0, 0)),
+            pl.BlockSpec((None, s, dh), lambda b, i: (b, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((None, block, dh), lambda b, i: (b, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((bh, s, dh), q.dtype),
+        interpret=interpret,
+    )(q, k, v)

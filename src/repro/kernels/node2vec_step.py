@@ -1,0 +1,105 @@
+"""Pallas TPU kernel: fused Node2Vec 2nd-order step.
+
+One kernel fuses the per-walker hot loop of the walk engine:
+
+    membership  x in N(u)        (streamed equality reduction over N(u))
+    alpha_pq    {1/p, 1, 1/q}    (select)
+    probs       alpha * w        (VPU)
+    sampling    inverse-CDF      (cumsum + compare-count, one uniform/walker)
+
+The unfused jnp path materializes membership, alpha, probs and the cumsum as
+separate HBM tensors ([W, D] each); fusing keeps everything for a walker block
+resident in VMEM — the step becomes memory-bound on exactly one read of the
+candidate/prev rows, which is the roofline floor for this op.
+
+Tiling: grid over walker blocks (BW rows); the candidate row block
+[BW, D] lives in VMEM, and the membership reduction streams N(u) in LANE-wide
+chunks so the peak VMEM working set is [BW, D] + [BW, D, LANE] bools per
+chunk iteration (bounded, independent of DP).
+
+Layout contract (matches the walk engines):
+  cand_ids  [W, D]  i32, PAD_ID padded, row-sorted
+  cand_w    [W, D]  f32, 0 padded
+  u         [W]     i32 (previous vertex)
+  prev_ids  [W, DP] i32, sorted, PAD_ID padded (N(u))
+  rand      [W]     f32 uniform in [0, 1)
+Returns
+  slot      [W]     i32 sampled candidate slot (caller maps to id)
+
+p, q are compile-time constants (walk hyper-parameters), baked into the
+kernel body — no scalar operands needed.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.core.graph import PAD_ID
+
+LANE = 128
+
+
+def _step_kernel(cand_ids_ref, cand_w_ref, u_ref, prev_ref, rand_ref,
+                 slot_ref, *, p_inv: float, q_inv: float):
+    cand = cand_ids_ref[...]          # [BW, D] i32
+    w = cand_w_ref[...]               # [BW, D] f32
+    u = u_ref[...]                    # [BW, 1] i32
+    r = rand_ref[...]                 # [BW, 1] f32
+
+    dp = prev_ref.shape[-1]
+    member = jnp.zeros(cand.shape, jnp.bool_)
+
+    def body(k, member):
+        chunk = prev_ref[:, pl.dslice(k * LANE, LANE)]   # [BW, LANE]
+        eq = cand[:, :, None] == chunk[:, None, :]       # [BW, D, LANE]
+        return member | jnp.any(eq, axis=-1)
+
+    member = jax.lax.fori_loop(0, dp // LANE, body, member)
+
+    is_u = cand == u                              # [BW, D]
+    valid = cand != PAD_ID
+    alpha = jnp.where(is_u, p_inv, jnp.where(member, 1.0, q_inv))
+    probs = jnp.where(valid, alpha * w, 0.0)      # [BW, D]
+    cum = jnp.cumsum(probs, axis=-1)
+    total = cum[:, -1:]
+    target = r * total
+    # index of first cumsum entry > target == count of entries <= target
+    slot = jnp.sum(((cum <= target) & valid).astype(jnp.int32), axis=-1,
+                   keepdims=True)
+    slot = jnp.minimum(slot, cand.shape[-1] - 1)
+    slot_ref[...] = slot.astype(jnp.int32)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("p", "q", "block_w", "interpret"))
+def node2vec_step(cand_ids: jnp.ndarray, cand_w: jnp.ndarray, u: jnp.ndarray,
+                  prev_ids: jnp.ndarray, rand: jnp.ndarray, p: float,
+                  q: float, block_w: int = 256,
+                  interpret: bool = False) -> jnp.ndarray:
+    """Fused step over all walkers. D/DP must be multiples of 128 and W a
+    multiple of block_w (ops.py pads arbitrary shapes to this contract)."""
+    wk, d = cand_ids.shape
+    dp = prev_ids.shape[-1]
+    assert d % LANE == 0 and dp % LANE == 0, (d, dp)
+    assert wk % block_w == 0, (wk, block_w)
+    grid = (wk // block_w,)
+    kernel = functools.partial(_step_kernel, p_inv=1.0 / p, q_inv=1.0 / q)
+
+    out = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_w, d), lambda i: (i, 0)),
+            pl.BlockSpec((block_w, d), lambda i: (i, 0)),
+            pl.BlockSpec((block_w, 1), lambda i: (i, 0)),
+            pl.BlockSpec((block_w, dp), lambda i: (i, 0)),
+            pl.BlockSpec((block_w, 1), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((block_w, 1), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((wk, 1), jnp.int32),
+        interpret=interpret,
+    )(cand_ids, cand_w, u.reshape(wk, 1), prev_ids, rand.reshape(wk, 1))
+    return out[:, 0]

@@ -1,0 +1,57 @@
+"""Pure-jnp oracles for the Pallas kernels (the correctness contracts)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.graph import PAD_ID
+from repro.core.transition import sample_slot, unnormalized_probs
+
+
+def node2vec_step_ref(cand_ids, cand_w, u, prev_ids, rand, p, q):
+    """Reference for kernels.node2vec_step: same inverse-CDF convention
+    (count of cumsum entries <= r*total)."""
+
+    def one(ci, cw, uu, pr, r):
+        probs = unnormalized_probs(ci, cw, uu, pr, p, q)
+        cum = jnp.cumsum(probs)
+        target = r * cum[-1]
+        valid = ci != PAD_ID
+        slot = jnp.sum(((cum <= target) & valid).astype(jnp.int32))
+        return jnp.minimum(slot, ci.shape[-1] - 1)
+
+    return jax.vmap(one)(cand_ids, cand_w, u, prev_ids, rand)
+
+
+def flash_attention_ref(q, k, v, window: int = 0, causal: bool = True):
+    """Reference for kernels.flash_attention: materialized-scores attention.
+    q/k/v [BH, S, dh]."""
+    s = q.shape[1]
+    scale = q.shape[-1] ** -0.5
+    logits = jnp.einsum("bqd,bkd->bqk", q.astype(jnp.float32),
+                        k.astype(jnp.float32)) * scale
+    qpos = jnp.arange(s)[:, None]
+    kpos = jnp.arange(s)[None, :]
+    ok = jnp.ones((s, s), bool)
+    if causal:
+        ok &= kpos <= qpos
+    if window:
+        ok &= kpos > qpos - window
+    logits = jnp.where(ok[None], logits, -1e30)
+    probs = jax.nn.softmax(logits, axis=-1)
+    return jnp.einsum("bqk,bkd->bqd", probs,
+                      v.astype(jnp.float32)).astype(q.dtype)
+
+
+def sgns_fused_ref(ci, po, no, valid):
+    """Reference for kernels.sgns: loss sum + grads via jax autodiff."""
+
+    def loss_fn(ci, po, no):
+        pos = jnp.sum(ci * po, axis=-1)
+        neg = jnp.einsum("bd,bkd->bk", ci, no)
+        per = (jnp.logaddexp(0.0, -pos) +
+               jnp.sum(jnp.logaddexp(0.0, neg), axis=-1))
+        return jnp.sum(per * valid)
+
+    loss, grads = jax.value_and_grad(loss_fn, argnums=(0, 1, 2))(ci, po, no)
+    return loss, grads[0], grads[1], grads[2]

@@ -1,0 +1,100 @@
+"""Pallas TPU kernel: fused SGNS forward + backward.
+
+For a batch block of gathered embedding rows, computes the skip-gram
+negative-sampling loss AND all three gradients in one VMEM-resident pass:
+
+    s_p = sigmoid(ci.po)            g_po  = (s_p - 1) * ci
+    s_nk = sigmoid(ci.no_k)         g_nok = s_nk * ci
+    loss = -log s_p - sum_k log(1 - s_nk)
+    g_ci = (s_p - 1) * po + sum_k s_nk * no_k
+
+The jnp autodiff path materializes the [B, K, D] products twice (fwd + bwd);
+the fused kernel reads ci/po/no exactly once and writes the three grads once —
+the arithmetic-intensity floor for this op. Embedding dim D is the lane axis
+(multiple of 128); negatives K is unrolled (small, e.g. 5-8).
+
+Shapes: ci, po [B, D] f32; no [B, K, D] f32; valid [B] f32 mask.
+Out: loss_sum [1, 1] (masked sum), g_ci, g_po [B, D], g_no [B, K, D].
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+LANE = 128
+
+
+def _sigmoid(x):
+    return 1.0 / (1.0 + jnp.exp(-x))
+
+
+def _sgns_kernel(ci_ref, po_ref, no_ref, valid_ref, loss_ref, gci_ref,
+                 gpo_ref, gno_ref):
+    i = pl.program_id(0)
+    ci = ci_ref[...]              # [B, D]
+    po = po_ref[...]              # [B, D]
+    no = no_ref[...]              # [B, K, D]
+    valid = valid_ref[...]        # [B, 1]
+
+    pos_score = jnp.sum(ci * po, axis=-1, keepdims=True)       # [B, 1]
+    s_p = _sigmoid(pos_score)
+    neg_score = jnp.sum(no * ci[:, None, :], axis=-1)          # [B, K]
+    s_n = _sigmoid(neg_score)
+
+    # loss = -log s_p - sum log(1 - s_n) = softplus(-x_p) + sum softplus(x_n)
+    loss = (jnp.logaddexp(0.0, -pos_score[:, 0]) +
+            jnp.sum(jnp.logaddexp(0.0, neg_score), axis=-1))   # [B]
+    masked = loss * valid[:, 0]
+
+    @pl.when(i == 0)
+    def _init():
+        loss_ref[...] = jnp.zeros_like(loss_ref)
+
+    loss_ref[0, 0] += jnp.sum(masked)
+
+    coeff_p = (s_p - 1.0) * valid                              # [B, 1]
+    coeff_n = s_n * valid                                      # [B, K]
+    gpo_ref[...] = coeff_p * ci
+    gno_ref[...] = coeff_n[:, :, None] * ci[:, None, :]
+    gci_ref[...] = coeff_p * po + jnp.sum(coeff_n[:, :, None] * no, axis=1)
+
+
+@functools.partial(jax.jit, static_argnames=("block_b", "interpret"))
+def sgns_fused(ci: jnp.ndarray, po: jnp.ndarray, no: jnp.ndarray,
+               valid: jnp.ndarray, block_b: int = 512,
+               interpret: bool = False):
+    """Fused SGNS loss+grads. B % block_b == 0, D % 128 == 0 required
+    (ops.py pads)."""
+    b, d = ci.shape
+    k = no.shape[1]
+    assert d % LANE == 0 and b % block_b == 0, (b, d)
+    grid = (b // block_b,)
+
+    out = pl.pallas_call(
+        _sgns_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_b, d), lambda i: (i, 0)),
+            pl.BlockSpec((block_b, d), lambda i: (i, 0)),
+            pl.BlockSpec((block_b, k, d), lambda i: (i, 0, 0)),
+            pl.BlockSpec((block_b, 1), lambda i: (i, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1), lambda i: (0, 0)),
+            pl.BlockSpec((block_b, d), lambda i: (i, 0)),
+            pl.BlockSpec((block_b, d), lambda i: (i, 0)),
+            pl.BlockSpec((block_b, k, d), lambda i: (i, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((1, 1), jnp.float32),
+            jax.ShapeDtypeStruct((b, d), jnp.float32),
+            jax.ShapeDtypeStruct((b, d), jnp.float32),
+            jax.ShapeDtypeStruct((b, k, d), jnp.float32),
+        ],
+        interpret=interpret,
+    )(ci, po, no, valid.reshape(b, 1))
+    loss_sum, g_ci, g_po, g_no = out
+    return loss_sum[0, 0], g_ci, g_po, g_no

@@ -1,0 +1,171 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Dry-run of the paper's own computation: the distributed Fast-Node2Vec
+superstep on the production 512-chip mesh, at WeC-26 scale (2^26 vertices,
+avg degree ~100, max degree ~2.8k — paper Table 1), WITHOUT building the
+graph: every array is a ShapeDtypeStruct.
+
+Cells (the paper's algorithm progression, §3.4):
+  fn_base    cap = max_degree, no hot set        (paper FN-Base)
+  fn_cache   cap = 128, hot tail replicated      (paper FN-Cache)
+  fn_approx  fn_cache + O(1) alias at hot v      (paper FN-Approx)
+plus beyond-paper variants used by the §Perf hillclimb (bf16 exchange
+payload, visit-aware request capacity).
+
+The collective term here is the NEIG-message volume the paper's Figs. 4/14
+measure — on TPU it is the all_to_all operand bytes, read directly from the
+lowered HLO.
+
+  PYTHONPATH=src python -m repro.launch.dryrun_walk [--cell fn_base]
+"""
+import argparse
+import dataclasses
+import json
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.walk import WalkParams
+from repro.core.walk_distributed import ShardedGraph, make_distributed_walk
+from repro.launch.mesh import make_rw_mesh
+from repro.roofline import analysis as roof
+
+ART_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..",
+                       "experiments", "dryrun_walk")
+
+# WeC-26 scale (paper Table 1: |V|=2^26, avg deg 100, max deg 2771)
+N = 1 << 26
+MAX_DEG = 2816          # max degree rounded up to a lane multiple
+SHARDS = 512
+ROUNDS = 8              # FN-Multi: walkers per round = N / ROUNDS
+W_LOCAL = N // ROUNDS // SHARDS
+HOT_K = 1 << 15         # replicated hot rows (32k x hot_cap x 8B ~ 0.7GB)
+
+
+def abstract_graph(cap: int, hot_cap: int, dtype_w=jnp.float32
+                   ) -> ShardedGraph:
+    n_pad = N
+
+    def sds(shape, dt):
+        return jax.ShapeDtypeStruct(shape, dt)
+
+    return ShardedGraph(
+        n=n_pad, n_orig=N, num_shards=SHARDS, cap=cap, hot_cap=hot_cap,
+        adj=sds((n_pad, cap), jnp.int32), wgt=sds((n_pad, cap), dtype_w),
+        alias_p=sds((n_pad, cap), jnp.float32),
+        alias_i=sds((n_pad, cap), jnp.int32),
+        deg=sds((n_pad,), jnp.int32),
+        hot_ids=sds((HOT_K,), jnp.int32),
+        hot_adj=sds((HOT_K, hot_cap), jnp.int32),
+        hot_wgt=sds((HOT_K, hot_cap), dtype_w),
+        hot_alias_p=sds((HOT_K, hot_cap), jnp.float32),
+        hot_alias_i=sds((HOT_K, hot_cap), jnp.int32),
+        hot_deg=sds((HOT_K,), jnp.int32),
+        hot_wmin=sds((HOT_K,), jnp.float32),
+        hot_wmax=sds((HOT_K,), jnp.float32))
+
+
+CELLS = {
+    # name: (cap, hot_cap, mode, capacity_per_dest)
+    # fn_base: every row at max-degree width, no cache; capacity sized for
+    # ALL walkers being remote cold (cf=4 over uniform destinations).
+    "fn_base": (MAX_DEG, MAX_DEG, "exact", 4 * W_LOCAL // SHARDS),
+    # fn_cache: cold rows capped at 128 (hot tail replicated) -> exchange
+    # payload width drops 22x; same request capacity.
+    "fn_cache": (128, MAX_DEG, "exact", 4 * W_LOCAL // SHARDS),
+    # fn_approx: hot vertices sampled O(1) from replicated alias tables.
+    "fn_approx": (128, MAX_DEG, "approx", 4 * W_LOCAL // SHARDS),
+    # beyond-paper: hot vertices ALWAYS take the O(1) alias path, which lets
+    # the exact pass run at cold width only — the static-shape-native form
+    # of FN-Approx (plain FN-Approx computes BOTH branches under `where`,
+    # so its compute saving never materializes in SPMD; measured).
+    "fn_approx_always": (128, MAX_DEG, "approx_always",
+                         4 * W_LOCAL // SHARDS),
+    # beyond-paper: popular vertices never enter the exchange AND the
+    # measured hot-visit share (bench_skew: ~0.5+ on skewed graphs) means
+    # cold requests are ~half of walkers -> capacity cf 4 -> 2.
+    "fn_approx_visitcap": (128, MAX_DEG, "approx_always",
+                           2 * W_LOCAL // SHARDS),
+    # beyond-paper: bf16 edge weights in the exchange payload (ids stay i32).
+    # NOTE: the CPU backend upcasts bf16 collectives to f32 (isolated and
+    # verified), so this win is invisible in CPU-lowered HLO; on TPU the
+    # payload drops 8B -> 6B per edge slot (0.75x).
+    "fn_approx_bf16": (128, MAX_DEG, "approx_always",
+                       2 * W_LOCAL // SHARDS),
+}
+
+
+def run_cell(name: str, length: int = 4, save: bool = True):
+    cap, hot_cap, mode, capacity = CELLS[name]
+    dtype_w = jnp.bfloat16 if name.endswith("bf16") else jnp.float32
+    mesh = make_rw_mesh()
+    g = abstract_graph(cap, hot_cap, dtype_w)
+    params = WalkParams(p=0.5, q=2.0, length=length, mode=mode,
+                        approx_eps=1e-3)
+    fn = make_distributed_walk(g, mesh, params, capacity, length=length)
+    w_total = W_LOCAL * SHARDS
+    starts = jax.ShapeDtypeStruct((w_total,), jnp.int32)
+    hot_pack = (g.hot_ids, g.hot_adj, g.hot_wgt, g.hot_alias_p,
+                g.hot_alias_i, g.hot_deg, g.hot_wmin, g.hot_wmax)
+    key = jax.ShapeDtypeStruct((2,), jnp.uint32)
+    t0 = time.time()
+    lowered = fn.lower(g.adj, g.wgt, g.alias_p, g.alias_i, g.deg, hot_pack,
+                       starts, starts, key)
+    compiled = lowered.compile()
+    t_compile = time.time() - t0
+    ca = compiled.cost_analysis() or {}
+    coll = roof.collective_bytes(compiled.as_text())
+    counts = coll.pop("_counts")
+    mem = compiled.memory_analysis()
+    # NOTE: the superstep loop lowers to a `while` whose body appears ONCE in
+    # the HLO text, and cost_analysis does not multiply through while loops
+    # either (verified) — so these numbers are already per-superstep (plus a
+    # small step-0 constant outside the loop).
+    coll_step = dict(coll)
+    flops_step = float(ca.get("flops", 0.0))
+    # graph residency per device (adj + weights + alias + hot cache)
+    graph_bytes = sum(np.prod(x.shape) * x.dtype.itemsize
+                      for x in (g.adj, g.wgt, g.alias_p, g.alias_i)
+                      ) // SHARDS + sum(
+        np.prod(x.shape) * x.dtype.itemsize for x in hot_pack)
+    art = {
+        "cell": name, "cap": cap, "hot_cap": hot_cap, "mode": mode,
+        "capacity": capacity, "walkers_per_shard": W_LOCAL,
+        "shards": SHARDS, "n": N, "compile_seconds": t_compile,
+        "flops_per_step_per_dev": flops_step,
+        "coll_bytes_per_step_per_dev": float(sum(coll_step.values())),
+        "coll_by_op_per_step": coll_step,
+        "coll_counts": counts,
+        "t_compute": flops_step / roof.PEAK_FLOPS,
+        "t_collective": sum(coll_step.values()) / roof.LINK_BW,
+        "graph_bytes_per_dev": int(graph_bytes),
+        "argument_bytes_per_dev": mem.argument_size_in_bytes,
+    }
+    art["bottleneck"] = ("collective" if art["t_collective"] >
+                         art["t_compute"] else "compute")
+    if save:
+        os.makedirs(ART_DIR, exist_ok=True)
+        with open(os.path.join(ART_DIR, f"{name}.json"), "w") as f:
+            json.dump(art, f, indent=1)
+    return art
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--cell", default=None, choices=list(CELLS))
+    args = ap.parse_args()
+    cells = [args.cell] if args.cell else list(CELLS)
+    print(f"{'cell':22s} {'t_compute':>10s} {'t_collective':>12s} "
+          f"{'coll GiB/step':>13s} {'dominant':>10s}")
+    for c in cells:
+        a = run_cell(c)
+        print(f"{c:22s} {a['t_compute']:10.3e} {a['t_collective']:12.3e} "
+              f"{a['coll_bytes_per_step_per_dev']/2**30:13.3f} "
+              f"{a['bottleneck']:>10s}", flush=True)
+
+
+if __name__ == "__main__":
+    main()

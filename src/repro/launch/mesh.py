@@ -1,0 +1,29 @@
+"""Mesh construction (functions, never module-level constants — importing
+this module must not touch jax device state)."""
+from __future__ import annotations
+
+import jax
+import numpy as np
+from jax.sharding import Mesh
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """Production mesh: 16x16 = 256 chips/pod; multi-pod adds a 2-pod axis."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_test_mesh(data: int = 2, model: int = 2, pod: int = 0):
+    """Small mesh over however many (possibly fake) devices tests have."""
+    if pod:
+        return jax.make_mesh((pod, data, model), ("pod", "data", "model"))
+    return jax.make_mesh((data, model), ("data", "model"))
+
+
+def make_rw_mesh(mesh: Mesh | None = None) -> Mesh:
+    """1-D mesh over all devices for the walk engine's flattened ``rw`` axis
+    (walks are data-parallel over every chip of the production mesh)."""
+    devices = (np.asarray(mesh.devices).reshape(-1) if mesh is not None
+               else np.asarray(jax.devices()))
+    return Mesh(devices, ("rw",))

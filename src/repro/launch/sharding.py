@@ -1,0 +1,166 @@
+"""Sharding rules: ModelConfig + mesh -> PartitionSpec pytrees.
+
+Scheme (MaxText-style 2D/3D):
+  * ``model`` axis = tensor parallelism (attention heads / FFN hidden / vocab)
+  * ``data``  axis = batch parallelism + FSDP weight sharding (each weight's
+    non-TP dim is sharded over ``data``; GSPMD all-gathers at use — ZeRO-3)
+  * ``pod``   axis (multi-pod) = pure data parallelism: the only cross-pod
+    traffic is the gradient all-reduce, which is what a 2-pod mesh must prove.
+
+Every rule is divisibility-checked: a dim is sharded over an axis only when
+evenly divisible (GQA KV heads (4/8) and 24-head configs replicate over
+``model`` instead of failing; their FSDP dim still shards).
+
+Decode KV caches shard the *sequence* dim over ``model`` (verified to lower
+DUS without collectives), which is what makes 32k/512k-token caches fit.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.models.config import ModelConfig
+
+FSDP_AXIS = "data"
+TP_AXIS = "model"
+
+
+def batch_axes(mesh: Mesh) -> Tuple[str, ...]:
+    return tuple(a for a in ("pod", "data") if a in mesh.shape)
+
+
+def axis_size(mesh: Mesh, name) -> int:
+    if isinstance(name, tuple):
+        return int(np.prod([mesh.shape[n] for n in name]))
+    return int(mesh.shape.get(name, 1))
+
+
+def _div(dim: int, mesh: Mesh, axis) -> Any:
+    """axis if it evenly divides dim else None (replicate)."""
+    return axis if dim % max(axis_size(mesh, axis), 1) == 0 else None
+
+
+def param_spec(path: Tuple[str, ...], shape: Tuple[int, ...],
+               mesh: Mesh, serve_mode: bool = False) -> P:
+    """Sharding rule for one parameter leaf, dispatched on its key path.
+
+    Stacked block params carry a leading [NSB] axis — rules index from the
+    right so they apply to both stacked and unstacked layouts.
+
+    ``serve_mode``: inference layout — TP-only, replicated over ``data`` (no
+    optimizer state, bf16 params): decode reads every weight once per token,
+    so per-token FSDP all-gathers would dominate (measured, §Perf).
+    """
+    name = path[-1]
+    fs, tp = (None, TP_AXIS) if serve_mode else (FSDP_AXIS, TP_AXIS)
+
+    def spec(*dims_from_right):
+        """Build a full-rank spec given specs for the trailing dims."""
+        lead = (None,) * (len(shape) - len(dims_from_right))
+        return P(*(lead + dims_from_right))
+
+    if name in ("tok", "unembed"):                       # [V, D]
+        return spec(_div(shape[-2], mesh, tp), _div(shape[-1], mesh, fs))
+    if name == "wq":                                     # [.., D, H, dh]
+        return spec(_div(shape[-3], mesh, fs), _div(shape[-2], mesh, tp),
+                    None)
+    if name in ("wk", "wv"):                             # [.., D, KV, dh]
+        return spec(_div(shape[-3], mesh, fs), _div(shape[-2], mesh, tp),
+                    None)
+    if name == "wo":                                     # [.., H, dh, D]
+        return spec(_div(shape[-3], mesh, tp), None, _div(shape[-1], mesh,
+                                                          fs))
+    if name in ("gate", "up", "down"):
+        # dense [.., D, F] / [.., F, D]  or  moe stacks [.., E, D, F]
+        d1 = _div(shape[-2], mesh, tp if name == "down" else fs)
+        d2 = _div(shape[-1], mesh, fs if name == "down" else tp)
+        if serve_mode and len(shape) >= 3 and shape[-3] > 1:
+            # serve-mode expert stacks can't replicate over `data` (mixtral:
+            # 126B expert params): expert-parallel over `data` when E
+            # divides, else keep FSDP on the non-TP dim (per-token gather,
+            # documented tradeoff).
+            e_ax = _div(shape[-3], mesh, FSDP_AXIS)
+            if e_ax is None:
+                d1 = _div(shape[-2], mesh,
+                          tp if name == "down" else FSDP_AXIS)
+                d2 = _div(shape[-1], mesh,
+                          FSDP_AXIS if name == "down" else tp)
+            lead = (None,) * (len(shape) - 3)
+            return P(*(lead + (e_ax, d1, d2)))
+        return spec(d1, d2)
+    if name == "router":                                 # [.., D, E]
+        return spec(_div(shape[-2], mesh, fs), None)
+    if name == "in_proj":                                # [.., D, 2di+2ds+nh]
+        return spec(_div(shape[-2], mesh, fs), _div(shape[-1], mesh, tp))
+    if name == "out_proj":                               # [.., di, D]
+        return spec(_div(shape[-2], mesh, tp), _div(shape[-1], mesh, fs))
+    if name == "conv_w":                                 # [.., K, C]
+        return spec(None, _div(shape[-1], mesh, tp))
+    # norms, biases, per-head scalars: replicate
+    return P(*((None,) * len(shape)))
+
+
+def _path_names(key_path) -> Tuple[str, ...]:
+    return tuple(str(getattr(p, "key", getattr(p, "idx", p)))
+                 for p in key_path)
+
+
+def param_specs(params_shape: Any, mesh: Mesh, cfg: ModelConfig,
+                serve_mode: bool = False) -> Any:
+    """Pytree of PartitionSpec matching a params (shape) pytree."""
+    flat, treedef = jax.tree_util.tree_flatten_with_path(params_shape)
+    specs = [param_spec(_path_names(kp), tuple(leaf.shape), mesh, serve_mode)
+             for kp, leaf in flat]
+    return jax.tree_util.tree_unflatten(treedef, specs)
+
+
+def batch_specs(batch_shape: Dict, mesh: Mesh) -> Dict:
+    """Leading-axis batch sharding over (pod, data); scalars replicated."""
+    ba = batch_axes(mesh)
+    out = {}
+    for k, v in batch_shape.items():
+        if v.ndim == 0 or v.shape[0] % max(axis_size(mesh, ba), 1) != 0:
+            out[k] = P()
+        else:
+            out[k] = P(ba)
+    return out
+
+
+def cache_specs(caches_shape: Any, mesh: Mesh, cfg: ModelConfig) -> Any:
+    """KV caches: [NSB, B, S, KV, dh] -> batch over (pod,data) if divisible,
+    S over model. Mamba states: heads over model. Cross memory: tokens over
+    model."""
+    ba = batch_axes(mesh)
+    nb = axis_size(mesh, ba)
+
+    def leaf_spec(key_path, leaf):
+        path = _path_names(key_path)
+        name = path[-1]
+        shape = tuple(leaf.shape)
+        b_ax = ba if shape[1] % nb == 0 else None  # dim 1 = batch (0 = NSB)
+        if name in ("k", "v", "mk", "mv"):         # [NSB, B, S, KV, dh]
+            return P(None, b_ax, _div(shape[2], mesh, TP_AXIS), None, None)
+        if name == "h":                            # [NSB, B, nh, hd, ds]
+            return P(None, b_ax, _div(shape[2], mesh, TP_AXIS), None, None)
+        if name in ("cx", "cb", "cc"):             # [NSB, B, K-1, C]
+            return P(None, b_ax, None, _div(shape[3], mesh, TP_AXIS))
+        return P(*((None,) * len(shape)))
+
+    flat, treedef = jax.tree_util.tree_flatten_with_path(caches_shape)
+    return jax.tree_util.tree_unflatten(
+        treedef, [leaf_spec(kp, lf) for kp, lf in flat])
+
+
+def to_named(tree_specs: Any, mesh: Mesh) -> Any:
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), tree_specs,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+def logits_spec(cfg: ModelConfig, mesh: Mesh, batch: int) -> P:
+    ba = batch_axes(mesh)
+    b_ax = ba if batch % max(axis_size(mesh, ba), 1) == 0 else None
+    v_ax = TP_AXIS if cfg.vocab % axis_size(mesh, TP_AXIS) == 0 else None
+    return P(b_ax, v_ax)

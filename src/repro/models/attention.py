@@ -1,0 +1,212 @@
+"""GQA attention: training (causal / sliding-window / bidirectional / cross)
+and single-token decode against a KV cache.
+
+Decode cache layout: k/v [B, S_max, KV, dh] with the *sequence* dim sharded
+over the ``model`` mesh axis for long contexts (see launch/mesh.py sharding
+rules) — partial-softmax reductions over the sharded axis are inserted by
+GSPMD. Sliding-window archs (mixtral) use a ring buffer of size ``window`` so
+decode cost is O(window), which is what makes long_500k serveable.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import optflags
+from repro.models.actsharding import constrain_decode_scores, constrain_weight
+from repro.models.config import ModelConfig
+from repro.models.layers import apply_rope, pdtype_of
+
+
+def _wq(p, dt):
+    return constrain_weight(p["wq"].astype(dt), (None, "model", None))
+
+
+def _wkv(p, name, dt):
+    return constrain_weight(p[name].astype(dt), (None, "model", None))
+
+
+def _wo(p, dt):
+    return constrain_weight(p["wo"].astype(dt), ("model", None, None))
+
+
+def init_attn(cfg: ModelConfig, key: jax.Array):
+    pd = pdtype_of(cfg)
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    s = cfg.d_model ** -0.5
+    return {
+        "wq": jax.random.normal(
+            k1, (cfg.d_model, cfg.num_heads, cfg.head_dim), pd) * s,
+        "wk": jax.random.normal(
+            k2, (cfg.d_model, cfg.num_kv_heads, cfg.head_dim), pd) * s,
+        "wv": jax.random.normal(
+            k3, (cfg.d_model, cfg.num_kv_heads, cfg.head_dim), pd) * s,
+        "wo": jax.random.normal(
+            k4, (cfg.num_heads, cfg.head_dim, cfg.d_model), pd) *
+        (cfg.num_heads * cfg.head_dim) ** -0.5,
+    }
+
+
+def _expand_kv(k: jnp.ndarray, q_per_kv: int):
+    """[B, S, KV, dh] -> [B, S, KV*q_per_kv, dh] by repeat (GQA)."""
+    if q_per_kv == 1:
+        return k
+    return jnp.repeat(k, q_per_kv, axis=2)
+
+
+def _mask_bias(sq: int, skv: int, causal: bool, window: int,
+               q_offset: int = 0) -> jnp.ndarray:
+    qpos = jnp.arange(sq)[:, None] + q_offset
+    kpos = jnp.arange(skv)[None, :]
+    ok = jnp.ones((sq, skv), bool)
+    if causal:
+        ok &= kpos <= qpos
+    if window:
+        ok &= kpos > qpos - window
+    return jnp.where(ok, 0.0, -1e30).astype(jnp.float32)
+
+
+def attend(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+           bias: Optional[jnp.ndarray], softcap: float = 0.0) -> jnp.ndarray:
+    """q [B,Sq,H,dh], k/v [B,Skv,H,dh] -> [B,Sq,H,dh]; f32 softmax."""
+    scale = q.shape[-1] ** -0.5
+    logits = jnp.einsum("bqhd,bkhd->bhqk", q, k).astype(jnp.float32) * scale
+    if softcap:
+        logits = softcap * jnp.tanh(logits / softcap)
+    if bias is not None:
+        logits = logits + bias
+    probs = jax.nn.softmax(logits, axis=-1).astype(q.dtype)
+    return jnp.einsum("bhqk,bkhd->bqhd", probs, v)
+
+
+def attn_train(cfg: ModelConfig, p: Dict, x: jnp.ndarray,
+               positions: jnp.ndarray, causal: bool = True,
+               window: Optional[int] = None,
+               memory: Optional[jnp.ndarray] = None) -> jnp.ndarray:
+    """Full-sequence attention. ``memory`` switches to cross-attention
+    (k/v from memory, no mask, no rope on kv)."""
+    dt = x.dtype
+    q = jnp.einsum("bsd,dhk->bshk", x, _wq(p, dt))
+    src = memory if memory is not None else x
+    k = jnp.einsum("bsd,dhk->bshk", src, _wkv(p, "wk", dt))
+    v = jnp.einsum("bsd,dhk->bshk", src, _wkv(p, "wv", dt))
+    if memory is None:
+        q = apply_rope(q, positions, cfg.rope_theta)
+        k = apply_rope(k, positions, cfg.rope_theta)
+        win = cfg.window if window is None else window
+        bias = _mask_bias(x.shape[1], src.shape[1], causal, win)
+    else:
+        bias = None
+    k = _expand_kv(k, cfg.q_per_kv)
+    v = _expand_kv(v, cfg.q_per_kv)
+    o = attend(q, k, v, bias, cfg.attn_logit_softcap)
+    return jnp.einsum("bshk,hkd->bsd", o, _wo(p, dt))
+
+
+# ---------------- decode with KV cache ----------------
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int,
+               dtype) -> Dict[str, jnp.ndarray]:
+    length = min(max_len, cfg.window) if cfg.window else max_len
+    shape = (batch, length, cfg.num_kv_heads, cfg.head_dim)
+    return {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype)}
+
+
+def attn_decode(cfg: ModelConfig, p: Dict, x: jnp.ndarray, pos: jnp.ndarray,
+                cache: Dict[str, jnp.ndarray]
+                ) -> Tuple[jnp.ndarray, Dict[str, jnp.ndarray]]:
+    """One-token decode. x [B, 1, D]; pos scalar i32 (current position).
+    Sliding-window caches are ring buffers indexed ``pos % window``."""
+    dt = x.dtype
+    b = x.shape[0]
+    q = jnp.einsum("bsd,dhk->bshk", x, _wq(p, dt))
+    k_new = jnp.einsum("bsd,dhk->bshk", x, _wkv(p, "wk", dt))
+    v_new = jnp.einsum("bsd,dhk->bshk", x, _wkv(p, "wv", dt))
+    q = apply_rope(q, pos[None, None].astype(jnp.int32), cfg.rope_theta)
+    k_new = apply_rope(k_new, pos[None, None].astype(jnp.int32),
+                       cfg.rope_theta)
+    s_cache = cache["k"].shape[1]
+    slot = jnp.where(cfg.window > 0, pos % s_cache, pos)
+    k = jax.lax.dynamic_update_slice(cache["k"], k_new,
+                                     (0, slot.astype(jnp.int32), 0, 0))
+    v = jax.lax.dynamic_update_slice(cache["v"], v_new,
+                                     (0, slot.astype(jnp.int32), 0, 0))
+    # valid positions: <= pos (ring buffer: all slots written once full)
+    kpos = jnp.arange(s_cache)
+    if cfg.window:
+        valid = (kpos <= slot) | (pos >= s_cache)
+    else:
+        valid = kpos <= pos
+    bias = jnp.where(valid, 0.0, -1e30).astype(jnp.float32)[None, None, None]
+    kk = _expand_kv(k, cfg.q_per_kv)
+    vv = _expand_kv(v, cfg.q_per_kv)
+    if optflags.SEQ_DECODE:
+        # seq-sharded partial-softmax decode: keep the cache's S dim sharded
+        # through the score einsum (GSPMD reduces softmax stats with tiny
+        # psums) instead of all-gathering the cache per token.
+        scale = q.shape[-1] ** -0.5
+        scores = jnp.einsum("bqhd,bkhd->bhqk", q, kk).astype(
+            jnp.float32) * scale
+        if cfg.attn_logit_softcap:
+            scores = cfg.attn_logit_softcap * jnp.tanh(
+                scores / cfg.attn_logit_softcap)
+        scores = constrain_decode_scores(scores + bias)
+        probs = jax.nn.softmax(scores, axis=-1).astype(q.dtype)
+        o = jnp.einsum("bhqk,bkhd->bqhd", probs, vv)
+    else:
+        o = attend(q, kk, vv, bias, cfg.attn_logit_softcap)
+    out = jnp.einsum("bshk,hkd->bsd", o, _wo(p, dt))
+    return out, {"k": k, "v": v}
+
+
+def attn_prefill(cfg: ModelConfig, p: Dict, x: jnp.ndarray,
+                 positions: jnp.ndarray, cache: Dict[str, jnp.ndarray]
+                 ) -> Tuple[jnp.ndarray, Dict[str, jnp.ndarray]]:
+    """Full-sequence forward that also fills the KV cache (SWA: last
+    ``window`` entries at their ring slots)."""
+    dt = x.dtype
+    s = x.shape[1]
+    q = jnp.einsum("bsd,dhk->bshk", x, _wq(p, dt))
+    k = jnp.einsum("bsd,dhk->bshk", x, _wkv(p, "wk", dt))
+    v = jnp.einsum("bsd,dhk->bshk", x, _wkv(p, "wv", dt))
+    q = apply_rope(q, positions, cfg.rope_theta)
+    k = apply_rope(k, positions, cfg.rope_theta)
+    bias = _mask_bias(s, s, True, cfg.window)
+    o = attend(q, _expand_kv(k, cfg.q_per_kv), _expand_kv(v, cfg.q_per_kv),
+               bias, cfg.attn_logit_softcap)
+    out = jnp.einsum("bshk,hkd->bsd", o, _wo(p, dt))
+    s_cache = cache["k"].shape[1]
+    if cfg.window and s > s_cache:
+        tail = jnp.arange(s - s_cache, s)
+        slots = tail % s_cache
+        ck = cache["k"].at[:, slots].set(k[:, -s_cache:].astype(
+            cache["k"].dtype))
+        cv = cache["v"].at[:, slots].set(v[:, -s_cache:].astype(
+            cache["v"].dtype))
+    else:
+        ck = jax.lax.dynamic_update_slice(
+            cache["k"], k[:, :s_cache].astype(cache["k"].dtype), (0, 0, 0, 0))
+        cv = jax.lax.dynamic_update_slice(
+            cache["v"], v[:, :s_cache].astype(cache["v"].dtype), (0, 0, 0, 0))
+    return out, {"k": ck, "v": cv}
+
+
+def cross_decode(cfg: ModelConfig, p: Dict, x: jnp.ndarray,
+                 memory_kv: Tuple[jnp.ndarray, jnp.ndarray]) -> jnp.ndarray:
+    """Cross-attention during decode: k/v precomputed from the encoder/vision
+    memory once at prefill."""
+    dt = x.dtype
+    q = jnp.einsum("bsd,dhk->bshk", x, _wq(p, dt))
+    k, v = memory_kv
+    o = attend(q, _expand_kv(k, cfg.q_per_kv), _expand_kv(v, cfg.q_per_kv),
+               None, cfg.attn_logit_softcap)
+    return jnp.einsum("bshk,hkd->bsd", o, _wo(p, dt))
+
+
+def memory_kv(cfg: ModelConfig, p: Dict, memory: jnp.ndarray):
+    dt = memory.dtype
+    k = jnp.einsum("bsd,dhk->bshk", memory, _wkv(p, "wk", dt))
+    v = jnp.einsum("bsd,dhk->bshk", memory, _wkv(p, "wv", dt))
+    return k, v

@@ -1,0 +1,119 @@
+"""Shared neural building blocks (pure functional, explicit param pytrees)."""
+from __future__ import annotations
+
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import actsharding
+from repro.models.config import ModelConfig
+
+
+def dtype_of(cfg: ModelConfig):
+    return jnp.dtype(cfg.dtype)
+
+
+def pdtype_of(cfg: ModelConfig):
+    return jnp.dtype(cfg.param_dtype)
+
+
+def rms_norm(x: jnp.ndarray, scale: jnp.ndarray, eps: float = 1e-6):
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    return ((x * jax.lax.rsqrt(var + eps)) * (1.0 + scale.astype(
+        jnp.float32))).astype(dt)
+
+
+def init_rms(cfg: ModelConfig):
+    return jnp.zeros((cfg.d_model,), pdtype_of(cfg))
+
+
+# ---------------- rotary embeddings ----------------
+
+def rope_freqs(head_dim: int, theta: float):
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32)
+                            / head_dim))
+
+
+def apply_rope(x: jnp.ndarray, positions: jnp.ndarray, theta: float):
+    """x: [..., S, H, dh]; positions: broadcastable to [..., S]."""
+    dh = x.shape[-1]
+    freqs = rope_freqs(dh, theta)                      # [dh/2]
+    angles = positions[..., None].astype(jnp.float32) * freqs  # [..., S, dh/2]
+    cos = jnp.cos(angles)[..., None, :]                # [..., S, 1, dh/2]
+    sin = jnp.sin(angles)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], -1)
+    return out.astype(x.dtype)
+
+
+# ---------------- MLP ----------------
+
+def init_mlp(cfg: ModelConfig, key: jax.Array, d_ff: int | None = None):
+    d_ff = d_ff or cfg.d_ff
+    pd = pdtype_of(cfg)
+    k1, k2, k3 = jax.random.split(key, 3)
+    scale = cfg.d_model ** -0.5
+    p = {"down": jax.random.normal(k3, (d_ff, cfg.d_model), pd) *
+         d_ff ** -0.5}
+    if cfg.mlp_act == "swiglu":
+        p["gate"] = jax.random.normal(k1, (cfg.d_model, d_ff), pd) * scale
+        p["up"] = jax.random.normal(k2, (cfg.d_model, d_ff), pd) * scale
+    else:
+        p["up"] = jax.random.normal(k2, (cfg.d_model, d_ff), pd) * scale
+    return p
+
+
+def mlp_apply(cfg: ModelConfig, p: Dict[str, jnp.ndarray], x: jnp.ndarray):
+    dt = x.dtype
+    cw = actsharding.constrain_weight
+    up = cw(p["up"].astype(dt), (None, "model"))
+    if cfg.mlp_act == "swiglu":
+        g = x @ cw(p["gate"].astype(dt), (None, "model"))
+        h = jax.nn.silu(g) * (x @ up)
+    elif cfg.mlp_act == "sq_relu":   # nemotron: squared ReLU
+        h = jnp.square(jax.nn.relu(x @ up))
+    else:
+        h = jax.nn.gelu(x @ up)
+    return h @ cw(p["down"].astype(dt), ("model", None))
+
+
+# ---------------- embeddings / unembedding ----------------
+
+def init_embed(cfg: ModelConfig, key: jax.Array):
+    pd = pdtype_of(cfg)
+    k1, k2 = jax.random.split(key)
+    p = {"tok": jax.random.normal(k1, (cfg.vocab, cfg.d_model), pd) * 0.02,
+         "final_norm": init_rms(cfg)}
+    if not cfg.tie_embeddings:
+        p["unembed"] = jax.random.normal(
+            k2, (cfg.vocab, cfg.d_model), pd) * cfg.d_model ** -0.5
+    return p
+
+
+def embed_tokens(cfg: ModelConfig, p, tokens: jnp.ndarray):
+    w = actsharding.constrain_weight(p["tok"].astype(dtype_of(cfg)),
+                                     ("model", None))
+    return w[tokens]
+
+
+def logits_out(cfg: ModelConfig, p, x: jnp.ndarray):
+    """Final norm + unembed; logits in f32 for a stable softmax."""
+    x = rms_norm(x, p["final_norm"])
+    w = (p["tok"] if cfg.tie_embeddings else p["unembed"])
+    w = actsharding.constrain_weight(w.astype(jnp.float32), ("model", None))
+    return jnp.einsum("...d,vd->...v", x.astype(jnp.float32), w)
+
+
+def softmax_xent(logits: jnp.ndarray, labels: jnp.ndarray,
+                 mask: jnp.ndarray | None = None):
+    """Token-mean cross entropy. logits [..., V] f32, labels [...] i32."""
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    nll = logz - gold
+    if mask is None:
+        return jnp.mean(nll)
+    denom = jnp.maximum(jnp.sum(mask), 1.0)
+    return jnp.sum(nll * mask) / denom

@@ -1,0 +1,213 @@
+"""Mamba2 (SSD — state-space duality) block: chunked train/prefill scan and
+O(1)-state recurrent decode.
+
+Train path: the sequence is split into chunks of ``CHUNK``; within a chunk the
+SSD dual form is an attention-like [Q, Q] masked matmul (MXU-friendly), and a
+``lax.scan`` carries the [B, H, hd, ds] state across chunks — compute is
+O(S·Q) instead of O(S^2), and the scan keeps HLO size flat.
+
+Decode path: h <- exp(A·dt)·h + dt·B⊗x per token — this is what makes the
+ssm/hybrid architectures serve long_500k with a fixed-size state.
+
+Sharding: the input projection is SPLIT per component (z, x, B, C, dt) so
+every output is shard-aligned on the ``model`` axis — a fused [D, 2di+2ds+nh]
+projection shards at 274-column boundaries that cut across the component
+splits and forces collective-permute resharding on every slice (measured:
+~0.3 GiB/layer in the 32k prefill dry-run; see EXPERIMENTS.md §Perf). Heads
+(z, x, dt) are tensor-parallel; B/C are head-shared (ngroups=1) and therefore
+replicated — their projections are negligible (D x 128).
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.actsharding import constrain_weight
+from repro.models.config import ModelConfig
+from repro.models.layers import pdtype_of, rms_norm
+
+CHUNK = 256
+
+
+def init_mamba(cfg: ModelConfig, key: jax.Array):
+    pd = pdtype_of(cfg)
+    d, di, ds, nh = cfg.d_model, cfg.d_inner, cfg.ssm_state, cfg.ssm_heads
+    ks = jax.random.split(key, 6)
+    s = d ** -0.5
+    return {
+        "in_z": jax.random.normal(ks[0], (d, di), pd) * s,
+        "in_x": jax.random.normal(ks[1], (d, di), pd) * s,
+        "in_b": jax.random.normal(ks[2], (d, ds), pd) * s,
+        "in_c": jax.random.normal(ks[3], (d, ds), pd) * s,
+        "in_dt": jax.random.normal(ks[4], (d, nh), pd) * s,
+        "conv_x": jax.random.normal(ks[5], (cfg.ssm_conv, di), pd) * 0.1,
+        "conv_b": jax.random.normal(
+            jax.random.fold_in(key, 7), (cfg.ssm_conv, ds), pd) * 0.1,
+        "conv_c": jax.random.normal(
+            jax.random.fold_in(key, 8), (cfg.ssm_conv, ds), pd) * 0.1,
+        "conv_bias_x": jnp.zeros((di,), pd),
+        "conv_bias_b": jnp.zeros((ds,), pd),
+        "conv_bias_c": jnp.zeros((ds,), pd),
+        "A_log": jnp.zeros((nh,), pd),
+        "dt_bias": jnp.zeros((nh,), pd),
+        "D": jnp.ones((nh,), pd),
+        "norm": jnp.zeros((di,), pd),
+        "out_proj": jax.random.normal(
+            jax.random.fold_in(key, 9), (di, d), pd) * di ** -0.5,
+    }
+
+
+def _causal_conv(x: jnp.ndarray, w: jnp.ndarray, b: jnp.ndarray):
+    """Depthwise causal conv along S. x [B, S, C], w [K, C]."""
+    k = w.shape[0]
+    pad = jnp.pad(x, ((0, 0), (k - 1, 0), (0, 0)))
+    out = jnp.zeros_like(x)
+    for i in range(k):  # small static K (4): unrolled taps
+        out = out + pad[:, i:i + x.shape[1], :] * w[i]
+    return jax.nn.silu(out + b)
+
+
+def _project(cfg: ModelConfig, p: Dict, x: jnp.ndarray):
+    """Split, shard-aligned input projections. Returns (z, xr, br, cr, dt)
+    where xr/br/cr are pre-conv raw streams."""
+    dt_ = x.dtype
+    z = x @ constrain_weight(p["in_z"].astype(dt_), (None, "model"))
+    xr = x @ constrain_weight(p["in_x"].astype(dt_), (None, "model"))
+    br = x @ constrain_weight(p["in_b"].astype(dt_), (None, None))
+    cr = x @ constrain_weight(p["in_c"].astype(dt_), (None, None))
+    dtr = x @ constrain_weight(p["in_dt"].astype(dt_), (None, "model"))
+    return z, xr, br, cr, dtr
+
+
+def _ssd_chunk_scan(cfg: ModelConfig, xh: jnp.ndarray, bmat: jnp.ndarray,
+                    cmat: jnp.ndarray, dt: jnp.ndarray, a: jnp.ndarray,
+                    h0: jnp.ndarray):
+    """One chunk of the SSD dual form.
+
+    xh [B,Q,H,hd]; bmat/cmat [B,Q,ds]; dt [B,Q,H]; a = A*dt (negative)
+    h0 [B,H,hd,ds]. Returns (y [B,Q,H,hd], h1).
+    """
+    lc = jnp.cumsum(a, axis=1)                     # [B,Q,H] log decay cumsum
+    # intra-chunk: M[t,i] = (C_t.B_i) * exp(lc_t - lc_i) * dt_i  (t >= i)
+    cb = jnp.einsum("bts,bis->bti", cmat, bmat)    # [B,Q,Q]
+    q = xh.shape[1]
+    causal = jnp.tril(jnp.ones((q, q), bool))
+    ratio = jnp.exp(lc[:, :, None, :] - lc[:, None, :, :])   # [B,Q,Q,H]
+    m = cb[..., None] * ratio * dt[:, None, :, :]
+    m = jnp.where(causal[None, :, :, None], m, 0.0)
+    y = jnp.einsum("btih,bihd->bthd", m.astype(xh.dtype), xh)
+    # inter-chunk: y += exp(lc_t) * C_t . h0
+    p = jnp.exp(lc)                                # [B,Q,H]
+    y = y + jnp.einsum("bts,bhds->bthd", cmat,
+                       h0.astype(xh.dtype)) * p[..., None].astype(xh.dtype)
+    # state update: h1 = exp(lc_Q) h0 + sum_i exp(lc_Q - lc_i) dt_i B_i (x) x_i
+    pq = jnp.exp(lc[:, -1])                        # [B,H]
+    coef = jnp.exp(lc[:, -1:, :] - lc) * dt        # [B,Q,H]
+    h_new = jnp.einsum("bqs,bqhd,bqh->bhds", bmat.astype(jnp.float32),
+                       xh.astype(jnp.float32), coef.astype(jnp.float32))
+    h1 = pq[:, :, None, None] * h0 + h_new
+    return y, h1
+
+
+def mamba_apply(cfg: ModelConfig, p: Dict, x: jnp.ndarray,
+                return_state: bool = False):
+    """Full-sequence (train / prefill) forward. x [B, S, D]."""
+    dt_ = x.dtype
+    b, s, _ = x.shape
+    nh, hd, ds = cfg.ssm_heads, cfg.ssm_headdim, cfg.ssm_state
+    z, xr, br, cr, dtr = _project(cfg, p, x)
+    xc = _causal_conv(xr, p["conv_x"].astype(dt_),
+                      p["conv_bias_x"].astype(dt_))
+    bmat = _causal_conv(br, p["conv_b"].astype(dt_),
+                        p["conv_bias_b"].astype(dt_))
+    cmat = _causal_conv(cr, p["conv_c"].astype(dt_),
+                        p["conv_bias_c"].astype(dt_))
+    dt = jax.nn.softplus(dtr.astype(jnp.float32) +
+                         p["dt_bias"].astype(jnp.float32))   # [B,S,H]
+    a_neg = -jnp.exp(p["A_log"].astype(jnp.float32)) * dt    # [B,S,H]
+    xh = xc.reshape(b, s, nh, hd)
+
+    q = min(CHUNK, s)
+    assert s % q == 0, (s, q)
+    nchunk = s // q
+
+    def chunk_body(h, args):
+        xq, bq, cq, dtq, aq = args
+        y, h = _ssd_chunk_scan(cfg, xq, bq, cq, dtq, aq, h)
+        return h, y
+
+    def to_chunks(t):
+        return t.reshape(b, nchunk, q, *t.shape[2:]).swapaxes(0, 1)
+
+    h0 = jnp.zeros((b, nh, hd, ds), jnp.float32)
+    h_fin, ys = jax.lax.scan(chunk_body, h0,
+                             (to_chunks(xh), to_chunks(bmat), to_chunks(cmat),
+                              to_chunks(dt), to_chunks(a_neg)))
+    y = ys.swapaxes(0, 1).reshape(b, s, nh, hd)
+    y = y + xh * p["D"].astype(dt_)[None, None, :, None]
+    y = y.reshape(b, s, cfg.d_inner)
+    y = rms_norm(y, p["norm"]) * jax.nn.silu(z)
+    out = y @ constrain_weight(p["out_proj"].astype(dt_), ("model", None))
+    if return_state:
+        # conv caches hold the last K-1 *pre-conv* rows of each stream
+        k1 = cfg.ssm_conv - 1
+        return out, {"h": h_fin, "cx": xr[:, -k1:, :], "cb": br[:, -k1:, :],
+                     "cc": cr[:, -k1:, :]}
+    return out
+
+
+def mamba_prefill(cfg: ModelConfig, p: Dict, x: jnp.ndarray):
+    """Full-sequence forward returning (y, cache) for subsequent decode."""
+    return mamba_apply(cfg, p, x, return_state=True)
+
+
+# ---------------- decode ----------------
+
+def init_mamba_cache(cfg: ModelConfig, batch: int, dtype):
+    k1 = cfg.ssm_conv - 1
+    return {
+        "h": jnp.zeros((batch, cfg.ssm_heads, cfg.ssm_headdim,
+                        cfg.ssm_state), jnp.float32),
+        "cx": jnp.zeros((batch, k1, cfg.d_inner), dtype),
+        "cb": jnp.zeros((batch, k1, cfg.ssm_state), dtype),
+        "cc": jnp.zeros((batch, k1, cfg.ssm_state), dtype),
+    }
+
+
+def _conv_step(hist: jnp.ndarray, new: jnp.ndarray, w: jnp.ndarray,
+               b: jnp.ndarray):
+    """One causal-conv step: hist [B, K-1, C] + new [B, C]."""
+    full = jnp.concatenate([hist, new[:, None, :]], axis=1)
+    out = jnp.sum(full * w[None], axis=1) + b
+    return jax.nn.silu(out), full[:, 1:, :]
+
+
+def mamba_decode(cfg: ModelConfig, p: Dict, x: jnp.ndarray,
+                 cache: Dict) -> Tuple[jnp.ndarray, Dict]:
+    """One-token recurrent step. x [B, 1, D]."""
+    dt_ = x.dtype
+    b = x.shape[0]
+    nh, hd, ds = cfg.ssm_heads, cfg.ssm_headdim, cfg.ssm_state
+    z, xr, br, cr, dtr = _project(cfg, p, x[:, 0:1])
+    z, xr, br, cr, dtr = (t[:, 0] for t in (z, xr, br, cr, dtr))
+    xc, ncx = _conv_step(cache["cx"], xr, p["conv_x"].astype(dt_),
+                         p["conv_bias_x"].astype(dt_))
+    bvec, ncb = _conv_step(cache["cb"], br, p["conv_b"].astype(dt_),
+                           p["conv_bias_b"].astype(dt_))
+    cvec, ncc = _conv_step(cache["cc"], cr, p["conv_c"].astype(dt_),
+                           p["conv_bias_c"].astype(dt_))
+    dt = jax.nn.softplus(dtr.astype(jnp.float32) +
+                         p["dt_bias"].astype(jnp.float32))   # [B,H]
+    a = jnp.exp(-jnp.exp(p["A_log"].astype(jnp.float32)) * dt)  # [B,H]
+    xh = xc.reshape(b, nh, hd).astype(jnp.float32)
+    upd = jnp.einsum("bhd,bs,bh->bhds", xh, bvec.astype(jnp.float32), dt)
+    h = a[:, :, None, None] * cache["h"] + upd
+    y = jnp.einsum("bhds,bs->bhd", h, cvec.astype(jnp.float32))
+    y = (y + xh * p["D"].astype(jnp.float32)[None, :, None]).astype(dt_)
+    y = y.reshape(b, cfg.d_inner)
+    y = rms_norm(y, p["norm"]) * jax.nn.silu(z)
+    out = (y @ constrain_weight(p["out_proj"].astype(dt_),
+                                ("model", None)))[:, None, :]
+    return out, {"h": h, "cx": ncx, "cb": ncb, "cc": ncc}

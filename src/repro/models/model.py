@@ -1,0 +1,114 @@
+"""Top-level model API shared by every assigned architecture.
+
+    params            = init_params(cfg, key)
+    loss              = loss_fn(cfg, params, batch)           (train)
+    logits, caches    = prefill(cfg, params, batch)           (inference)
+    logits, caches    = serve_step(cfg, params, token, pos, caches)
+
+Batch layouts (see configs.input_specs):
+  LM families:   {"tokens": [B, S] i32, "labels": [B, S] i32}
+  encdec:        + {"frames": [B, Ta, D]}  (audio frontend stub: precomputed
+                 frame embeddings, per the assignment spec)
+  vlm:           + {"patches": [B, Ni, D]} (vision frontend stub)
+
+The MoE group count is wired to the batch sharding factor so routing is
+shard-local (see models/moe.py).
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import attention as attn_lib
+from repro.models import transformer as tf
+from repro.models.actsharding import constrain_batch, constrain_logits
+from repro.models.config import ModelConfig
+from repro.models.layers import (dtype_of, embed_tokens, init_embed,
+                                 logits_out, softmax_xent)
+
+
+# ---------------- init ----------------
+
+def init_params(cfg: ModelConfig, key: jax.Array) -> Dict:
+    k_embed, k_blocks, k_enc = jax.random.split(key, 3)
+    params = {"embed": init_embed(cfg, k_embed),
+              "blocks": tf.init_blocks(cfg, k_blocks)}
+    if cfg.enc_layers:
+        enc_cfg = encoder_config(cfg)
+        params["encoder"] = tf.init_blocks(enc_cfg, k_enc)
+    return params
+
+
+def encoder_config(cfg: ModelConfig) -> ModelConfig:
+    """The encoder stack of an enc-dec model: bidirectional dense layers."""
+    import dataclasses
+    return dataclasses.replace(
+        cfg, num_layers=cfg.enc_layers, attn_every=1, cross_every=0,
+        moe_experts=0, moe_every=0, enc_layers=0)
+
+
+def _memory(cfg: ModelConfig, params: Dict, batch: Dict
+            ) -> Optional[jnp.ndarray]:
+    """Cross-attention memory: encoder output (encdec) or patch embeddings
+    (vlm). Frontends are stubs: inputs arrive as precomputed embeddings."""
+    if cfg.enc_layers:
+        frames = batch["frames"].astype(dtype_of(cfg))
+        pos = jnp.arange(frames.shape[1])
+        enc_cfg = encoder_config(cfg)
+        return tf.stack_train(enc_cfg, params["encoder"], frames, pos,
+                              causal=False)
+    if cfg.cross_every:
+        return batch["patches"].astype(dtype_of(cfg))
+    return None
+
+
+# ---------------- train ----------------
+
+def forward_train(cfg: ModelConfig, params: Dict, batch: Dict,
+                  num_groups: int = 1) -> jnp.ndarray:
+    tokens = batch["tokens"]
+    x = constrain_batch(embed_tokens(cfg, params["embed"], tokens))
+    positions = jnp.arange(tokens.shape[1])
+    memory = _memory(cfg, params, batch)
+    x = tf.stack_train(cfg, params["blocks"], x, positions, memory=memory,
+                       num_groups=num_groups)
+    logits = logits_out(cfg, params["embed"], constrain_batch(x))
+    return constrain_logits(logits)
+
+
+def loss_fn(cfg: ModelConfig, params: Dict, batch: Dict,
+            num_groups: int = 1) -> jnp.ndarray:
+    logits = forward_train(cfg, params, batch, num_groups)
+    return softmax_xent(logits, batch["labels"], batch.get("mask"))
+
+
+# ---------------- inference ----------------
+
+def prefill(cfg: ModelConfig, params: Dict, batch: Dict, max_len: int,
+            num_groups: int = 1) -> Tuple[jnp.ndarray, Dict]:
+    """Run the full prompt, returning (last-token logits, filled caches)."""
+    tokens = batch["tokens"]
+    b, s = tokens.shape
+    x = embed_tokens(cfg, params["embed"], tokens)
+    positions = jnp.arange(s)
+    memory = _memory(cfg, params, batch)
+    caches = tf.init_caches(cfg, b, max_len, dtype_of(cfg))
+    x, caches = tf.stack_prefill(cfg, params["blocks"], caches, x, positions,
+                                 memory=memory, num_groups=num_groups)
+    logits = logits_out(cfg, params["embed"], x[:, -1:])
+    return logits[:, 0], caches
+
+
+def serve_step(cfg: ModelConfig, params: Dict, token: jnp.ndarray,
+               pos: jnp.ndarray, caches: Dict, num_groups: int = 1
+               ) -> Tuple[jnp.ndarray, Dict]:
+    """One decode step: token [B] i32, pos scalar i32 -> (logits [B, V],
+    updated caches). Sub-quadratic archs (ssm/hybrid/SWA) have O(state)
+    cost independent of context length."""
+    x = embed_tokens(cfg, params["embed"], token[:, None])
+    x, caches = tf.stack_decode(cfg, params["blocks"], caches, x, pos,
+                                num_groups=num_groups)
+    logits = logits_out(cfg, params["embed"], x)
+    return logits[:, 0], caches

@@ -1,0 +1,25 @@
+"""Beyond-paper optimization flags (env-controlled so the §Perf hillclimb can
+A/B each change against the committed baseline; defaults flip to ON once a
+win is confirmed in EXPERIMENTS.md §Perf).
+
+    REPRO_SEQ_DECODE=1   seq-sharded partial-softmax decode attention:
+                         keeps the KV cache sharded over `model` through the
+                         attention einsums (psum of tiny softmax stats)
+                         instead of all-gathering the cache every token.
+Note on bf16 TP collectives: the residual psums lower as bf16 already (the
+einsums are bf16); the f32 all-reduces seen in this container's HLO are a
+CPU-backend upcast artifact (isolated repro in EXPERIMENTS.md methodology
+note 4), so there is nothing to flip at the program level — on TPU the
+collectives are natively bf16.
+"""
+from __future__ import annotations
+
+import os
+
+
+def _flag(name: str, default: str = "0") -> bool:
+    return os.environ.get(name, default) == "1"
+
+
+SEQ_DECODE = _flag("REPRO_SEQ_DECODE", "1")   # default ON (confirmed win:
+                                              # 81x decode collective cut)

@@ -1,0 +1,244 @@
+"""Stack assembler: every architecture is a ``lax.scan`` over superblocks.
+
+A superblock is the repeating layer pattern from ``ModelConfig.superblock()``
+(dense: 1 layer; jamba: 8 layers with 1 attention + 7 mamba and alternating
+dense/MoE FFNs; llama-vision: 4 self-attn + 1 cross-attn; ...). Parameters
+are stacked [NSB, ...] on the leading axis; scanning keeps HLO size and
+compile time independent of depth and gives the standard remat boundary.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import attention as attn
+from repro.models import mamba as mb
+from repro.models import moe as moe_lib
+from repro.models.actsharding import constrain_batch
+from repro.models.config import LayerSpec, ModelConfig
+from repro.models.layers import init_mlp, init_rms, mlp_apply, rms_norm
+
+
+# ---------------- init ----------------
+
+def init_layer(cfg: ModelConfig, spec: LayerSpec, key: jax.Array) -> Dict:
+    k1, k2, k3 = jax.random.split(key, 3)
+    p: Dict[str, Any] = {"pre_norm": init_rms(cfg)}
+    if spec.kind in ("attn", "cross_attn", "attn_cross"):
+        p["attn"] = attn.init_attn(cfg, k1)
+        if spec.kind == "attn_cross":
+            p["xattn"] = attn.init_attn(cfg, k3)
+            p["xnorm"] = init_rms(cfg)
+    else:
+        p["mamba"] = mb.init_mamba(cfg, k1)
+    if spec.ffn != "none":
+        p["post_norm"] = init_rms(cfg)
+        p["ffn"] = (moe_lib.init_moe(cfg, k2) if spec.ffn == "moe"
+                    else init_mlp(cfg, k2))
+    return p
+
+
+def init_blocks(cfg: ModelConfig, key: jax.Array) -> Dict:
+    """Stacked per-pattern-position params: {"l0": stacked, "l1": ...}."""
+    pattern = cfg.superblock()
+    nsb = cfg.num_superblocks
+    out = {}
+    for i, spec in enumerate(pattern):
+        keys = jax.random.split(jax.random.fold_in(key, i), nsb)
+        per = [init_layer(cfg, spec, keys[j]) for j in range(nsb)]
+        out[f"l{i}"] = jax.tree.map(lambda *xs: jnp.stack(xs), *per)
+    return out
+
+
+# ---------------- one superblock ----------------
+
+def _ffn(cfg: ModelConfig, spec: LayerSpec, p, x, num_groups: int):
+    if spec.ffn == "none":
+        return x
+    h = rms_norm(x, p["post_norm"])
+    if spec.ffn == "moe":
+        return x + moe_lib.moe_apply(cfg, p["ffn"], h, num_groups)
+    return x + mlp_apply(cfg, p["ffn"], h)
+
+
+def superblock_train(cfg: ModelConfig, params_sb: Dict, x: jnp.ndarray,
+                     positions: jnp.ndarray, memory: Optional[jnp.ndarray],
+                     num_groups: int, causal: bool = True) -> jnp.ndarray:
+    for i, spec in enumerate(cfg.superblock()):
+        p = params_sb[f"l{i}"]
+        x = constrain_batch(x)  # keep batch sharded; gather weights (ZeRO-3)
+        h = rms_norm(x, p["pre_norm"])
+        if spec.kind in ("attn", "attn_cross"):
+            x = x + attn.attn_train(cfg, p["attn"], h, positions,
+                                    causal=causal)
+            if spec.kind == "attn_cross":
+                hx = rms_norm(x, p["xnorm"])
+                x = x + attn.attn_train(cfg, p["xattn"], hx, positions,
+                                        memory=memory)
+        elif spec.kind == "cross_attn":
+            x = x + attn.attn_train(cfg, p["attn"], h, positions,
+                                    memory=memory)
+        else:
+            x = x + mb.mamba_apply(cfg, p["mamba"], h)
+        x = _ffn(cfg, spec, p, x, num_groups)
+    return x
+
+
+def stack_train(cfg: ModelConfig, blocks: Dict, x: jnp.ndarray,
+                positions: jnp.ndarray, memory: Optional[jnp.ndarray] = None,
+                num_groups: int = 1, causal: bool = True) -> jnp.ndarray:
+    def body(carry, params_sb):
+        out = superblock_train(cfg, params_sb, carry, positions, memory,
+                               num_groups, causal)
+        return out, None
+
+    if cfg.remat:
+        body = jax.checkpoint(body, prevent_cse=False)
+    if not cfg.scan_layers:
+        for j in range(cfg.num_superblocks):
+            x, _ = body(x, jax.tree.map(lambda t: t[j], blocks))
+        return x
+    x, _ = jax.lax.scan(body, x, blocks)
+    return x
+
+
+# ---------------- caches ----------------
+
+def _memory_len(cfg: ModelConfig) -> int:
+    return (cfg.num_audio_frames if cfg.enc_layers else cfg.num_image_tokens)
+
+
+def init_layer_cache(cfg: ModelConfig, spec: LayerSpec, batch: int,
+                     max_len: int, dtype) -> Dict:
+    if spec.kind == "attn":
+        return attn.init_cache(cfg, batch, max_len, dtype)
+    if spec.kind in ("cross_attn", "attn_cross"):
+        # cross-attn k/v over the (image/encoder) memory, filled at prefill
+        shape = (batch, _memory_len(cfg), cfg.num_kv_heads, cfg.head_dim)
+        c = {"mk": jnp.zeros(shape, dtype), "mv": jnp.zeros(shape, dtype)}
+        if spec.kind == "attn_cross":
+            c.update(attn.init_cache(cfg, batch, max_len, dtype))
+        return c
+    return mb.init_mamba_cache(cfg, batch, dtype)
+
+
+def init_caches(cfg: ModelConfig, batch: int, max_len: int, dtype) -> Dict:
+    nsb = cfg.num_superblocks
+    out = {}
+    for i, spec in enumerate(cfg.superblock()):
+        one = init_layer_cache(cfg, spec, batch, max_len, dtype)
+        out[f"l{i}"] = jax.tree.map(
+            lambda x: jnp.broadcast_to(x[None], (nsb,) + x.shape), one)
+    return out
+
+
+# ---------------- decode ----------------
+
+def superblock_decode(cfg: ModelConfig, params_sb: Dict, cache_sb: Dict,
+                      x: jnp.ndarray, pos: jnp.ndarray,
+                      num_groups: int) -> Tuple[jnp.ndarray, Dict]:
+    new_cache = {}
+    for i, spec in enumerate(cfg.superblock()):
+        p = params_sb[f"l{i}"]
+        c = cache_sb[f"l{i}"]
+        h = rms_norm(x, p["pre_norm"])
+        if spec.kind in ("attn", "attn_cross"):
+            kv = ({"k": c["k"], "v": c["v"]} if spec.kind == "attn_cross"
+                  else c)
+            o, kv = attn.attn_decode(cfg, p["attn"], h, pos, kv)
+            x = x + o
+            if spec.kind == "attn_cross":
+                hx = rms_norm(x, p["xnorm"])
+                x = x + attn.cross_decode(cfg, p["xattn"], hx,
+                                          (c["mk"], c["mv"]))
+                c = {"mk": c["mk"], "mv": c["mv"], **kv}
+            else:
+                c = kv
+        elif spec.kind == "cross_attn":
+            x = x + attn.cross_decode(cfg, p["attn"], h, (c["mk"], c["mv"]))
+        else:
+            o, c = mb.mamba_decode(cfg, p["mamba"], h, c)
+            x = x + o
+        new_cache[f"l{i}"] = c
+        x = _ffn(cfg, spec, p, x, num_groups)
+    return x, new_cache
+
+
+def stack_decode(cfg: ModelConfig, blocks: Dict, caches: Dict, x: jnp.ndarray,
+                 pos: jnp.ndarray, num_groups: int = 1
+                 ) -> Tuple[jnp.ndarray, Dict]:
+    def body(carry, scanned):
+        params_sb, cache_sb = scanned
+        out, new_cache = superblock_decode(cfg, params_sb, cache_sb, carry,
+                                           pos, num_groups)
+        return out, new_cache
+
+    if not cfg.scan_layers:
+        ncs = []
+        for j in range(cfg.num_superblocks):
+            x, nc = body(x, jax.tree.map(lambda t: t[j], (blocks, caches)))
+            ncs.append(nc)
+        return x, jax.tree.map(lambda *xs: jnp.stack(xs), *ncs)
+    x, new_caches = jax.lax.scan(body, x, (blocks, caches))
+    return x, new_caches
+
+
+# ---------------- prefill ----------------
+
+def superblock_prefill(cfg: ModelConfig, params_sb: Dict, cache_sb: Dict,
+                       x: jnp.ndarray, positions: jnp.ndarray,
+                       memory: Optional[jnp.ndarray],
+                       num_groups: int) -> Tuple[jnp.ndarray, Dict]:
+    new_cache = {}
+    for i, spec in enumerate(cfg.superblock()):
+        p = params_sb[f"l{i}"]
+        c = cache_sb[f"l{i}"]
+        h = rms_norm(x, p["pre_norm"])
+        if spec.kind in ("attn", "attn_cross"):
+            kv = ({"k": c["k"], "v": c["v"]} if spec.kind == "attn_cross"
+                  else c)
+            o, kv = attn.attn_prefill(cfg, p["attn"], h, positions, kv)
+            x = x + o
+            if spec.kind == "attn_cross":
+                mk, mv = attn.memory_kv(cfg, p["xattn"], memory)
+                hx = rms_norm(x, p["xnorm"])
+                x = x + attn.cross_decode(cfg, p["xattn"], hx, (mk, mv))
+                c = {"mk": mk.astype(c["mk"].dtype),
+                     "mv": mv.astype(c["mv"].dtype), **kv}
+            else:
+                c = kv
+        elif spec.kind == "cross_attn":
+            mk, mv = attn.memory_kv(cfg, p["attn"], memory)
+            c = {"mk": mk.astype(c["mk"].dtype),
+                 "mv": mv.astype(c["mv"].dtype)}
+            x = x + attn.cross_decode(cfg, p["attn"], h, (mk, mv))
+        else:
+            o, c = mb.mamba_prefill(cfg, p["mamba"], h)
+            x = x + o
+        new_cache[f"l{i}"] = c
+        x = _ffn(cfg, spec, p, x, num_groups)
+    return x, new_cache
+
+
+def stack_prefill(cfg: ModelConfig, blocks: Dict, caches: Dict,
+                  x: jnp.ndarray, positions: jnp.ndarray,
+                  memory: Optional[jnp.ndarray] = None,
+                  num_groups: int = 1) -> Tuple[jnp.ndarray, Dict]:
+    def body(carry, scanned):
+        params_sb, cache_sb = scanned
+        out, new_cache = superblock_prefill(cfg, params_sb, cache_sb, carry,
+                                            positions, memory, num_groups)
+        return out, new_cache
+
+    if cfg.remat:
+        body = jax.checkpoint(body, prevent_cse=False)
+    if not cfg.scan_layers:
+        ncs = []
+        for j in range(cfg.num_superblocks):
+            x, nc = body(x, jax.tree.map(lambda t: t[j], (blocks, caches)))
+            ncs.append(nc)
+        return x, jax.tree.map(lambda *xs: jnp.stack(xs), *ncs)
+    x, new_caches = jax.lax.scan(body, x, (blocks, caches))
+    return x, new_caches

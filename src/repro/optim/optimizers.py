@@ -1,0 +1,109 @@
+"""Pure-JAX optimizers (no optax in this environment — built as a substrate).
+
+API mirrors the (init, update) transformation style:
+
+    opt = adamw(lr=3e-4, weight_decay=0.1)
+    state = opt.init(params)
+    updates, state = opt.update(grads, state, params)
+    params = apply_updates(params, updates)
+
+All states are pytrees, shardable by pjit with the same specs as params.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple, Optional, Union
+
+import jax
+import jax.numpy as jnp
+
+Schedule = Callable[[jnp.ndarray], jnp.ndarray]
+ScalarOrSchedule = Union[float, Schedule]
+
+
+@dataclasses.dataclass(frozen=True)
+class Optimizer:
+    init: Callable[[Any], Any]
+    update: Callable[..., Any]  # (grads, state, params) -> (updates, state)
+
+
+def _lr_at(lr: ScalarOrSchedule, count: jnp.ndarray) -> jnp.ndarray:
+    return lr(count) if callable(lr) else jnp.asarray(lr, jnp.float32)
+
+
+class SgdState(NamedTuple):
+    count: jnp.ndarray
+    momentum: Any
+
+
+def sgd(lr: ScalarOrSchedule, momentum: float = 0.0) -> Optimizer:
+    def init(params):
+        mom = jax.tree.map(jnp.zeros_like, params) if momentum else None
+        return SgdState(jnp.zeros((), jnp.int32), mom)
+
+    def update(grads, state, params=None):
+        step_lr = _lr_at(lr, state.count)
+        if momentum:
+            mom = jax.tree.map(lambda m, g: momentum * m + g,
+                               state.momentum, grads)
+            updates = jax.tree.map(lambda m: -step_lr * m, mom)
+        else:
+            mom = None
+            updates = jax.tree.map(lambda g: -step_lr * g, grads)
+        return updates, SgdState(state.count + 1, mom)
+
+    return Optimizer(init, update)
+
+
+class AdamState(NamedTuple):
+    count: jnp.ndarray
+    mu: Any
+    nu: Any
+
+
+def adam(lr: ScalarOrSchedule, b1: float = 0.9, b2: float = 0.999,
+         eps: float = 1e-8, weight_decay: float = 0.0,
+         mask: Optional[Callable[[Any], Any]] = None) -> Optimizer:
+    """Adam / AdamW (decoupled weight decay when ``weight_decay > 0``).
+
+    ``mask(params)`` -> pytree of bools selecting which leaves get decay
+    (default: everything with ndim >= 2, the usual no-decay-on-bias/norm rule).
+    """
+
+    def init(params):
+        return AdamState(jnp.zeros((), jnp.int32),
+                         jax.tree.map(jnp.zeros_like, params),
+                         jax.tree.map(jnp.zeros_like, params))
+
+    def update(grads, state, params=None):
+        count = state.count + 1
+        step_lr = _lr_at(lr, state.count)
+        mu = jax.tree.map(lambda m, g: b1 * m + (1 - b1) * g, state.mu, grads)
+        nu = jax.tree.map(lambda v, g: b2 * v + (1 - b2) * (g * g),
+                          state.nu, grads)
+        c = count.astype(jnp.float32)
+        bc1 = 1 - b1 ** c
+        bc2 = 1 - b2 ** c
+
+        def upd(m, v):
+            return -step_lr * (m / bc1) / (jnp.sqrt(v / bc2) + eps)
+
+        updates = jax.tree.map(upd, mu, nu)
+        if weight_decay and params is not None:
+            decay_mask = (mask(params) if mask is not None else
+                          jax.tree.map(lambda p: p.ndim >= 2, params))
+            updates = jax.tree.map(
+                lambda u, p, m: u - step_lr * weight_decay * p * m,
+                updates, params, decay_mask)
+        return updates, AdamState(count, mu, nu)
+
+    return Optimizer(init, update)
+
+
+def adamw(lr: ScalarOrSchedule, b1: float = 0.9, b2: float = 0.95,
+          eps: float = 1e-8, weight_decay: float = 0.1) -> Optimizer:
+    return adam(lr, b1=b1, b2=b2, eps=eps, weight_decay=weight_decay)
+
+
+def apply_updates(params, updates):
+    return jax.tree.map(lambda p, u: (p + u).astype(p.dtype), params, updates)

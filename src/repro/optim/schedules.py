@@ -1,0 +1,32 @@
+"""Learning-rate schedules (pure functions of the step count)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def constant(value: float):
+    return lambda count: jnp.asarray(value, jnp.float32)
+
+
+def linear_warmup_cosine(peak: float, warmup_steps: int, total_steps: int,
+                         floor: float = 0.0):
+    """MaxText-style warmup -> cosine decay to ``floor``."""
+
+    def fn(count):
+        c = count.astype(jnp.float32)
+        warm = peak * (c + 1) / max(warmup_steps, 1)
+        progress = jnp.clip((c - warmup_steps) /
+                            max(total_steps - warmup_steps, 1), 0.0, 1.0)
+        cos = floor + (peak - floor) * 0.5 * (1 + jnp.cos(jnp.pi * progress))
+        return jnp.where(c < warmup_steps, warm, cos)
+
+    return fn
+
+
+def inverse_sqrt(peak: float, warmup_steps: int):
+    def fn(count):
+        c = jnp.maximum(count.astype(jnp.float32), 1.0)
+        return peak * jnp.minimum(c / max(warmup_steps, 1),
+                                  jnp.sqrt(warmup_steps / c))
+
+    return fn

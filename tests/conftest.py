@@ -1,0 +1,16 @@
+"""Shared fixtures. NOTE: no XLA_FLAGS here — tests see 1 CPU device; the
+distributed tests spawn subprocesses that set the device count themselves."""
+import numpy as np
+import pytest
+
+from repro.core import rmat
+
+
+@pytest.fixture(scope="session")
+def small_graph():
+    return rmat.wec(8, avg_degree=12, seed=1)          # 256 vertices
+
+
+@pytest.fixture(scope="session")
+def skewed_graph():
+    return rmat.skew(4, k=9, avg_degree=20, seed=3)    # 512 vertices, skewed

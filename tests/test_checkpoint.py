@@ -1,0 +1,55 @@
+"""Checkpointer: roundtrip, atomic commit, async, resume."""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint.checkpointer import Checkpointer
+
+
+def _tree():
+    return {"params": {"w": jnp.arange(6.0).reshape(2, 3),
+                       "b": jnp.ones(3)},
+            "opt": [jnp.zeros(2), jnp.asarray(3)]}
+
+
+def test_roundtrip(tmp_path):
+    ck = Checkpointer(str(tmp_path))
+    tree = _tree()
+    ck.save(5, tree, meta={"note": "x"})
+    got, meta = ck.restore(tree)
+    assert meta["step"] == 5 and meta["note"] == "x"
+    for a, b in zip(jax.tree.leaves(tree), jax.tree.leaves(got)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_latest_and_multiple_steps(tmp_path):
+    ck = Checkpointer(str(tmp_path))
+    ck.save(1, _tree())
+    ck.save(7, _tree())
+    assert ck.latest_step() == 7
+    _, meta = ck.restore(_tree(), step=1)
+    assert meta["step"] == 1
+
+
+def test_async_save(tmp_path):
+    ck = Checkpointer(str(tmp_path))
+    ck.save(3, _tree(), blocking=False)
+    ck.wait()
+    assert ck.latest_step() == 3
+
+
+def test_no_partial_checkpoint_visible(tmp_path):
+    """A .tmp staging dir must never be selected by restore."""
+    ck = Checkpointer(str(tmp_path))
+    ck.save(2, _tree())
+    os.makedirs(os.path.join(str(tmp_path), "step_00000009.tmp"))
+    assert ck.latest_step() == 2
+
+
+def test_restore_empty_raises(tmp_path):
+    ck = Checkpointer(str(tmp_path))
+    with pytest.raises(FileNotFoundError):
+        ck.restore(_tree())

@@ -1,0 +1,57 @@
+"""Flash-attention Pallas kernel vs materialized-scores oracle."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels.ops import flash_attention_op
+from repro.kernels.ref import flash_attention_ref
+
+
+def _check(B, S, H, KV, dh, window, seed=0, dtype=np.float32):
+    rng = np.random.default_rng(seed)
+    q = rng.normal(size=(B, S, H, dh)).astype(dtype)
+    k = rng.normal(size=(B, S, KV, dh)).astype(dtype)
+    v = rng.normal(size=(B, S, KV, dh)).astype(dtype)
+    got = np.asarray(flash_attention_op(*map(jnp.asarray, (q, k, v)),
+                                        window=window))
+    ke, ve = np.repeat(k, H // KV, 2), np.repeat(v, H // KV, 2)
+    want = np.stack([np.asarray(flash_attention_ref(
+        jnp.asarray(np.swapaxes(q[b], 0, 1)),
+        jnp.asarray(np.swapaxes(ke[b], 0, 1)),
+        jnp.asarray(np.swapaxes(ve[b], 0, 1)), window=window))
+        for b in range(B)])
+    want = np.swapaxes(want, 1, 2)
+    np.testing.assert_allclose(got, want, atol=3e-3, rtol=3e-3)
+
+
+@pytest.mark.parametrize("B,S,H,KV,dh,window", [
+    (2, 128, 4, 2, 32, 0),      # GQA causal
+    (1, 256, 2, 2, 64, 0),      # MHA causal
+    (2, 256, 4, 1, 32, 64),     # MQA + sliding window
+    (1, 96, 3, 3, 16, 0),       # ragged (padding path)
+    (1, 128, 2, 2, 128, 0),     # full lane width
+])
+def test_flash_matches_reference(B, S, H, KV, dh, window):
+    _check(B, S, H, KV, dh, window)
+
+
+def test_flash_bf16():
+    rng = np.random.default_rng(1)
+    q = rng.normal(size=(1, 128, 2, 32)).astype(np.float32)
+    k = rng.normal(size=(1, 128, 2, 32)).astype(np.float32)
+    v = rng.normal(size=(1, 128, 2, 32)).astype(np.float32)
+    got = flash_attention_op(jnp.asarray(q, jnp.bfloat16),
+                             jnp.asarray(k, jnp.bfloat16),
+                             jnp.asarray(v, jnp.bfloat16))
+    ref = flash_attention_op(*map(jnp.asarray, (q, k, v)))
+    np.testing.assert_allclose(np.asarray(got, np.float32), np.asarray(ref),
+                               atol=3e-2, rtol=3e-2)
+
+
+@given(st.integers(1, 2), st.sampled_from([64, 128, 192]),
+       st.sampled_from([1, 2, 4]), st.sampled_from([16, 32]),
+       st.integers(0, 3))
+@settings(max_examples=8, deadline=None)
+def test_flash_property(B, S, H, dh, seed):
+    _check(B, S, H, H, dh, 0, seed=seed)

@@ -1,0 +1,100 @@
+"""CSR graph / RMAT / PaddedGraph invariants (unit + hypothesis property)."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import rmat
+from repro.core.graph import PAD_ID, CSRGraph, PaddedGraph
+
+
+def test_csr_from_edges_basic():
+    g = CSRGraph.from_edges(4, [0, 1, 2], [1, 2, 3])
+    assert g.n == 4 and g.m == 6  # symmetrized
+    assert list(g.neighbors(1)) == [0, 2]
+    assert g.deg.sum() == g.m
+
+
+def test_csr_drops_self_loops_and_dupes():
+    g = CSRGraph.from_edges(3, [0, 0, 0, 1], [0, 1, 1, 2])
+    assert g.m == 4  # (0,1),(1,0),(1,2),(2,1)
+    assert 0 not in g.neighbors(0)
+
+
+@given(st.integers(2, 40), st.integers(1, 120), st.integers(0, 5))
+@settings(max_examples=30, deadline=None)
+def test_csr_invariants_random(n, m, seed):
+    rng = np.random.default_rng(seed)
+    src = rng.integers(0, n, m)
+    dst = rng.integers(0, n, m)
+    g = CSRGraph.from_edges(n, src, dst)
+    # rows sorted, within range, symmetric, no self loops
+    for v in range(n):
+        nb = g.neighbors(v)
+        assert np.all(np.diff(nb) > 0)
+        assert np.all((nb >= 0) & (nb < n))
+        assert v not in nb
+        for x in nb:
+            assert v in g.neighbors(int(x))
+
+
+def test_trim_top_weights():
+    rng = np.random.default_rng(0)
+    g = rmat.wec(7, avg_degree=16, seed=0)
+    t = g.trim_top_weights(5)
+    assert t.deg.max() <= 5 + 5  # out-trim + incoming from others... directed
+    # trim is per-out-vertex: every vertex keeps at most 5 out-edges
+    counts = t.row_ptr[1:] - t.row_ptr[:-1]
+    assert counts.max() <= 5
+
+
+def test_transition_table_bytes_matches_eq1():
+    g = CSRGraph.from_edges(3, [0, 1], [1, 2])
+    d = g.deg.astype(np.int64)
+    assert g.transition_table_bytes() == 8 * int((d * d).sum())
+
+
+@pytest.mark.parametrize("fam,k,avg", [("er", 8, 10), ("wec", 8, 50)])
+def test_rmat_families(fam, k, avg):
+    g = getattr(rmat, fam)(k, avg_degree=avg, seed=0)
+    assert g.n == 1 << k
+    # avg degree within 40% of target (dedup removes some)
+    assert abs(g.m / g.n - avg) / avg < 0.4
+
+
+def test_skew_increases_max_degree():
+    maxdeg = [rmat.skew(s, k=9, avg_degree=20, seed=0).max_degree
+              for s in (1, 3, 5)]
+    assert maxdeg[0] < maxdeg[1] < maxdeg[2]
+
+
+def test_padded_graph_exact_rows(small_graph):
+    g = small_graph
+    pg = PaddedGraph.build(g)
+    assert pg.cap == g.max_degree
+    for v in [0, 1, g.n // 2, g.n - 1]:
+        nb = g.neighbors(v)
+        row = np.asarray(pg.adj[v])
+        assert np.array_equal(row[:len(nb)], nb)
+        assert np.all(row[len(nb):] == PAD_ID)
+
+
+def test_padded_graph_hot_cache_covers_tail(small_graph):
+    g = small_graph
+    cap = 16
+    pg = PaddedGraph.build(g, cap=cap)
+    deg = np.asarray(pg.deg)
+    hot_pos = np.asarray(pg.hot_pos)
+    # invariant: every vertex with degree > cap is hot
+    assert np.all(hot_pos[deg > cap] >= 0)
+    # hot rows are full-degree exact
+    hot_ids = np.asarray(pg.hot_ids)
+    for i, v in enumerate(hot_ids):
+        nb = g.neighbors(int(v))
+        row = np.asarray(pg.hot_adj[i])
+        assert np.array_equal(row[:len(nb)], nb)
+
+
+def test_padded_graph_no_hot_sentinel(small_graph):
+    pg = PaddedGraph.build(small_graph)  # cap = max degree -> no hot set
+    assert np.asarray(pg.hot_ids)[0] == PAD_ID
+    assert np.all(np.asarray(pg.hot_pos) == -1)

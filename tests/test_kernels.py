@@ -1,0 +1,86 @@
+"""Pallas kernels vs pure-jnp oracles: shape/dtype sweeps (interpret mode)."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.graph import PAD_ID
+from repro.kernels.ops import node2vec_step_op, sgns_fused_op
+from repro.kernels.ref import node2vec_step_ref, sgns_fused_ref
+
+
+def _make_step_inputs(rng, w, d, dp):
+    deg = rng.integers(1, d + 1, w)
+    cand = np.full((w, d), PAD_ID, np.int32)
+    cw = np.zeros((w, d), np.float32)
+    for i in range(w):
+        ids = np.sort(rng.choice(10000, size=deg[i], replace=False))
+        cand[i, :deg[i]] = ids
+        cw[i, :deg[i]] = rng.random(deg[i]).astype(np.float32) + 0.1
+    degp = rng.integers(1, dp + 1, w)
+    prev = np.full((w, dp), PAD_ID, np.int32)
+    for i in range(w):
+        pool = np.unique(np.concatenate(
+            [cand[i, :deg[i]], rng.choice(10000, size=dp)]))
+        ids = np.sort(rng.choice(pool, size=min(degp[i], len(pool)),
+                                 replace=False).astype(np.int32))
+        prev[i, :len(ids)] = ids
+    u = cand[np.arange(w), rng.integers(0, deg)]
+    r = rng.random(w).astype(np.float32)
+    return cand, cw, u, prev, r
+
+
+@pytest.mark.parametrize("w,d,dp", [(16, 8, 8), (64, 130, 40), (256, 128, 128),
+                                    (7, 200, 300), (33, 64, 1)])
+@pytest.mark.parametrize("pq", [(0.5, 2.0), (2.0, 0.5), (1.0, 1.0)])
+def test_node2vec_step_kernel_matches_ref(w, d, dp, pq):
+    rng = np.random.default_rng(w * d + dp)
+    cand, cw, u, prev, r = _make_step_inputs(rng, w, d, dp)
+    args = tuple(map(jnp.asarray, (cand, cw, u, prev, r)))
+    got = np.asarray(node2vec_step_op(*args, *pq))
+    want = np.asarray(node2vec_step_ref(*args, *pq))
+    assert np.array_equal(got, want)
+
+
+@given(st.integers(1, 64), st.integers(1, 40), st.integers(1, 40),
+       st.integers(0, 100))
+@settings(max_examples=15, deadline=None)
+def test_node2vec_step_kernel_property(w, d, dp, seed):
+    rng = np.random.default_rng(seed)
+    cand, cw, u, prev, r = _make_step_inputs(rng, w, d, dp)
+    args = tuple(map(jnp.asarray, (cand, cw, u, prev, r)))
+    got = np.asarray(node2vec_step_op(*args, 0.5, 2.0))
+    want = np.asarray(node2vec_step_ref(*args, 0.5, 2.0))
+    assert np.array_equal(got, want)
+    # sampled slots always index a live candidate
+    deg = (cand != PAD_ID).sum(1)
+    assert np.all(got < np.maximum(deg, 1))
+
+
+@pytest.mark.parametrize("b,k,d", [(8, 1, 16), (64, 5, 32), (100, 8, 128),
+                                   (512, 5, 200), (3, 12, 300)])
+def test_sgns_kernel_matches_autodiff(b, k, d):
+    rng = np.random.default_rng(b + k + d)
+    ci = rng.normal(size=(b, d)).astype(np.float32)
+    po = rng.normal(size=(b, d)).astype(np.float32)
+    no = rng.normal(size=(b, k, d)).astype(np.float32)
+    valid = (rng.random(b) > 0.2).astype(np.float32)
+    got = sgns_fused_op(*map(jnp.asarray, (ci, po, no, valid)))
+    want = sgns_fused_ref(*map(jnp.asarray, (ci, po, no, valid)))
+    for g, w_ in zip(got, want):
+        np.testing.assert_allclose(np.asarray(g), np.asarray(w_),
+                                   atol=3e-4, rtol=3e-4)
+
+
+def test_sgns_kernel_masked_rows_zero_grad():
+    rng = np.random.default_rng(0)
+    b, k, d = 16, 4, 32
+    ci = rng.normal(size=(b, d)).astype(np.float32)
+    po = rng.normal(size=(b, d)).astype(np.float32)
+    no = rng.normal(size=(b, k, d)).astype(np.float32)
+    valid = np.zeros(b, np.float32)
+    valid[:4] = 1.0
+    loss, g_ci, g_po, g_no = sgns_fused_op(
+        *map(jnp.asarray, (ci, po, no, valid)))
+    assert np.all(np.asarray(g_ci)[4:] == 0)
+    assert np.all(np.asarray(g_no)[4:] == 0)

@@ -1,0 +1,37 @@
+"""Data pipeline: prefetch iterator + sharded batches."""
+import time
+
+import numpy as np
+import pytest
+
+from repro.data.pipeline import PrefetchIterator
+
+
+def test_prefetch_preserves_order():
+    it = PrefetchIterator(iter(range(20)), prefetch=4)
+    assert list(it) == list(range(20))
+
+
+def test_prefetch_overlaps():
+    def slow_gen():
+        for i in range(5):
+            time.sleep(0.05)
+            yield i
+
+    it = PrefetchIterator(slow_gen(), prefetch=4)
+    time.sleep(0.30)  # producer should have finished by now
+    t0 = time.time()
+    out = list(it)
+    assert out == list(range(5))
+    assert time.time() - t0 < 0.15  # items were prefetched
+
+
+def test_prefetch_propagates_errors():
+    def bad_gen():
+        yield 1
+        raise ValueError("boom")
+
+    it = PrefetchIterator(bad_gen(), prefetch=2)
+    assert next(it) == 1
+    with pytest.raises(ValueError):
+        list(it)

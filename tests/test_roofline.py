@@ -1,0 +1,74 @@
+"""Roofline math: term definitions, traffic model, model-FLOPs accounting."""
+import numpy as np
+import pytest
+
+from repro import configs
+from repro.roofline import analysis as roof
+from repro.roofline import traffic
+
+
+def test_roofline_terms_per_device_semantics():
+    rl = roof.Roofline(arch="x", shape="train_4k", mesh="m", chips=256,
+                       hlo_flops=197e12,     # exactly one second of compute
+                       hlo_bytes=819e9,      # one second of HBM
+                       coll_bytes=50e9,      # one second of ICI
+                       coll_by_op={}, model_flops=197e12 * 256 * 0.5)
+    assert abs(rl.t_compute - 1.0) < 1e-9
+    assert abs(rl.t_memory - 1.0) < 1e-9
+    assert abs(rl.t_collective - 1.0) < 1e-9
+    assert abs(rl.useful_ratio - 0.5) < 1e-9
+    assert abs(rl.roofline_fraction - 0.5) < 1e-9
+
+
+def test_model_flops_train_vs_decode():
+    cfg = configs.get_config("yi-6b")
+    n = cfg.active_param_count()
+    train = roof.model_flops_for(cfg, "train", 4096, 256)
+    assert abs(train - 6 * n * 4096 * 256) / train < 1e-9
+    decode = roof.model_flops_for(cfg, "decode", 32768, 128)
+    assert abs(decode - 2 * n * 128) / decode < 1e-9
+
+
+def test_moe_active_flops_smaller_than_total():
+    cfg = configs.get_config("mixtral-8x22b")
+    assert cfg.active_param_count() < 0.3 * cfg.param_count()
+
+
+@pytest.mark.parametrize("kind", ["train", "prefill", "decode"])
+def test_traffic_model_monotonic_in_batch(kind):
+    cfg = configs.get_config("yi-6b")
+    mesh = {"data": 16, "model": 16}
+    small = traffic.analytic_bytes(cfg, kind, 4096, 64, mesh)["total"]
+    big = traffic.analytic_bytes(cfg, kind, 4096, 256, mesh)["total"]
+    assert big >= small
+
+
+def test_traffic_decode_is_weights_plus_cache():
+    cfg = configs.get_config("yi-6b")
+    mesh = {"data": 16, "model": 16}
+    t = traffic.analytic_bytes(cfg, "decode", 32768, 128, mesh)
+    assert t["attn_s2"] == 0.0
+    assert t["total"] >= t["weights"] + t["cache"]
+
+
+def test_traffic_flash_attention_removes_s2_term():
+    cfg = configs.get_config("yi-6b")
+    mesh = {"data": 16, "model": 16}
+    base = traffic.analytic_bytes(cfg, "prefill", 32768, 32, mesh)
+    flash = traffic.analytic_bytes(cfg, "prefill", 32768, 32, mesh,
+                                   flash_attention=True)
+    assert base["attn_s2"] > 0 and flash["attn_s2"] == 0
+    assert flash["total"] < base["total"]
+
+
+def test_traffic_swa_caps_score_term():
+    """Mixtral's sliding window bounds the S^2 term to S*W."""
+    full = configs.get_config("yi-6b")
+    swa = configs.get_config("mixtral-8x22b")
+    mesh = {"data": 16, "model": 16}
+    t_full = traffic.analytic_bytes(full, "prefill", 32768, 32, mesh)
+    t_swa = traffic.analytic_bytes(swa, "prefill", 32768, 32, mesh)
+    # per attention layer, SWA's score traffic is window/seq of full
+    per_full = t_full["attn_s2"] / 32
+    per_swa = t_swa["attn_s2"] / 56
+    assert per_swa < per_full * (4096 / 32768) * 3  # heads/batch factors

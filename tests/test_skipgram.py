@@ -1,0 +1,73 @@
+"""SGNS training + corpus pipeline."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core.skipgram import (SGNSConfig, init_params, sgns_loss,
+                                 train_step)
+from repro.data.corpus import (NegativeSampler, sgns_pairs,
+                               walks_to_lm_tokens, walks_to_sgns_batches)
+from repro.optim.optimizers import adam
+
+
+def test_sgns_loss_decreases():
+    cfg = SGNSConfig(vocab=50, dim=16, negatives=3)
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    opt = adam(0.05)
+    state = opt.init(params)
+    rng = np.random.default_rng(0)
+    # fixed co-occurrence structure: i with i+1 mod 50
+    c = rng.integers(0, 50, 512)
+    batch = {"center": jnp.asarray(c, jnp.int32),
+             "pos": jnp.asarray((c + 1) % 50, jnp.int32),
+             "neg": jnp.asarray(rng.integers(0, 50, (512, 3)), jnp.int32)}
+    first = float(sgns_loss(params, batch["center"], batch["pos"],
+                            batch["neg"]))
+    for _ in range(30):
+        params, state, loss = train_step(params, state, batch, opt)
+    assert float(loss) < first * 0.7
+
+
+@given(st.integers(2, 10), st.integers(2, 30), st.integers(1, 6))
+@settings(max_examples=20, deadline=None)
+def test_sgns_pairs_window_property(w, l, window):
+    walks = np.arange(w * l, dtype=np.int32).reshape(w, l)  # all distinct
+    c, x = sgns_pairs(walks, window)
+    # count: for each row, sum over offsets 1..min(window, l-1) of 2*(l-off)
+    expect = w * sum(2 * (l - off) for off in range(1, min(window, l - 1) + 1))
+    assert len(c) == expect
+    # symmetry: (a, b) present iff (b, a) present
+    pairs = set(zip(c.tolist(), x.tolist()))
+    assert all((b, a) in pairs for a, b in pairs)
+
+
+def test_negative_sampler_distribution():
+    walks = np.concatenate([np.zeros(300, np.int32),
+                            np.ones(100, np.int32),
+                            np.full(25, 2, np.int32)])[None, :]
+    s = NegativeSampler(walks, vocab=3, power=0.75)
+    rng = np.random.default_rng(0)
+    draws = s.sample(rng, 40000)
+    freq = np.bincount(draws, minlength=3) / 40000
+    target = np.array([300., 100., 25.]) ** 0.75
+    np.testing.assert_allclose(freq, target / target.sum(), atol=0.02)
+
+
+def test_batches_shapes_and_validity():
+    walks = np.random.default_rng(0).integers(0, 40, (8, 10)).astype(np.int32)
+    batches = list(walks_to_sgns_batches(walks, 40, window=3, negatives=4,
+                                         batch_size=64, epochs=1))
+    assert all(b["center"].shape == (64,) for b in batches)
+    assert all(b["neg"].shape == (64, 4) for b in batches)
+    total_valid = sum(int(b["valid"].sum()) for b in batches)
+    c, x = sgns_pairs(walks, 3)
+    assert total_valid == len(c)
+
+
+def test_walks_to_lm_tokens():
+    walks = np.arange(60, dtype=np.int32).reshape(4, 15)
+    toks = walks_to_lm_tokens(walks, seq_len=8)
+    assert toks.shape == (7, 8)
+    toks_bos = walks_to_lm_tokens(walks, seq_len=8, bos=999)
+    assert (toks_bos == 999).sum() == 4 or toks_bos.shape[0] * 8 <= 64

@@ -1,0 +1,76 @@
+"""2nd-order transition probabilities vs python-set oracle + FN-Approx
+bound correctness (paper Eq. 2-3)."""
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core.graph import PAD_ID, CSRGraph, PaddedGraph
+from repro.core.transition import (approx_gap, brute_force_probs, membership,
+                                   unnormalized_probs)
+
+
+def _random_graph(n, m, seed):
+    rng = np.random.default_rng(seed)
+    src = rng.integers(0, n, m)
+    dst = rng.integers(0, n, m)
+    w = rng.random(m).astype(np.float32) + 0.1
+    return CSRGraph.from_edges(n, src, dst, w)
+
+
+@given(st.integers(4, 24), st.integers(6, 80), st.integers(0, 10),
+       st.sampled_from([(0.5, 2.0), (2.0, 0.5), (1.0, 1.0), (4.0, 0.25)]))
+@settings(max_examples=40, deadline=None)
+def test_probs_match_oracle(n, m, seed, pq):
+    p, q = pq
+    g = _random_graph(n, m, seed)
+    pg = PaddedGraph.build(g)
+    rng = np.random.default_rng(seed)
+    for _ in range(5):
+        v = int(rng.integers(0, n))
+        if g.deg[v] == 0:
+            continue
+        nb = g.neighbors(v)
+        u = int(nb[rng.integers(0, len(nb))])
+        probs = np.asarray(unnormalized_probs(
+            pg.adj[v], pg.wgt[v], jnp.int32(u), pg.adj[u], p, q))
+        total = probs.sum()
+        oracle = brute_force_probs(g, u, v, p, q)
+        for slot, x in enumerate(np.asarray(pg.adj[v])):
+            if x == PAD_ID:
+                assert probs[slot] == 0.0
+            else:
+                np.testing.assert_allclose(probs[slot] / total,
+                                           oracle[int(x)], atol=1e-5)
+
+
+def test_membership_with_pads():
+    prev = jnp.asarray([2, 5, 9, PAD_ID, PAD_ID], jnp.int32)
+    cand = jnp.asarray([1, 2, 9, 10, PAD_ID], jnp.int32)
+    got = np.asarray(membership(prev, cand))
+    assert list(got) == [False, True, True, False, False]
+
+
+@given(st.integers(4, 30), st.integers(20, 150), st.integers(0, 8),
+       st.sampled_from([(0.5, 2.0), (2.0, 0.5), (1.0, 4.0)]))
+@settings(max_examples=30, deadline=None)
+def test_approx_bounds_contain_true_probs(n, m, seed, pq):
+    """Paper Eq. 2-3 (generalized): every actual transition prob for a
+    non-u candidate lies within [LB-ish, UB-ish]; we verify the *gap*
+    computed from scalars bounds the true spread of non-u probabilities."""
+    p, q = pq
+    g = _random_graph(n, m, seed)
+    rng = np.random.default_rng(seed)
+    for _ in range(5):
+        v = int(rng.integers(0, n))
+        if g.deg[v] < 3:
+            continue
+        nb = g.neighbors(v)
+        u = int(nb[rng.integers(0, len(nb))])
+        oracle = brute_force_probs(g, u, v, p, q)
+        non_u = [pr for x, pr in oracle.items() if x != u]
+        w = g.weights(v)
+        gap = float(approx_gap(jnp.int32(g.deg[u]), jnp.int32(g.deg[v]),
+                               jnp.float32(w.min()), jnp.float32(w.max()),
+                               p, q))
+        spread = max(non_u) - min(non_u)
+        assert spread <= gap + 1e-6, (spread, gap)

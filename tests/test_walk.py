@@ -1,0 +1,137 @@
+"""Reference walk engine: validity, layout-invariance, sampling correctness."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import rmat
+from repro.core.graph import CSRGraph, PaddedGraph
+from repro.core.transition import brute_force_probs
+from repro.core.walk import WalkParams, simulate_walks
+
+PARAMS = WalkParams(p=0.5, q=2.0, length=12)
+
+
+def _check_valid(g, walks):
+    for i in range(walks.shape[0]):
+        prev = i
+        for s in range(walks.shape[1]):
+            x = int(walks[i, s])
+            nb = g.neighbors(prev)
+            if len(nb) == 0:
+                assert x == prev
+            else:
+                assert x in nb, (i, s, prev, x)
+            prev = x
+
+
+def test_walks_follow_edges(small_graph):
+    pg = PaddedGraph.build(small_graph)
+    walks = np.asarray(simulate_walks(pg, np.arange(small_graph.n), 0,
+                                      PARAMS))
+    assert walks.shape == (small_graph.n, PARAMS.length)
+    _check_valid(small_graph, walks)
+
+
+def test_walks_deterministic(small_graph):
+    pg = PaddedGraph.build(small_graph)
+    w1 = np.asarray(simulate_walks(pg, np.arange(small_graph.n), 7, PARAMS))
+    w2 = np.asarray(simulate_walks(pg, np.arange(small_graph.n), 7, PARAMS))
+    w3 = np.asarray(simulate_walks(pg, np.arange(small_graph.n), 8, PARAMS))
+    assert np.array_equal(w1, w2)
+    assert not np.array_equal(w1, w3)
+
+
+def test_layout_invariance_base_vs_cache(small_graph):
+    """FN-Base and FN-Cache layouts must generate bit-identical walks — the
+    paper's claim that all FN variants are exact, strengthened to bit level
+    by the deg-width alias construction."""
+    g = small_graph
+    w_base = np.asarray(simulate_walks(PaddedGraph.build(g),
+                                       np.arange(g.n), 0, PARAMS))
+    for cap in (8, 16, 24):
+        w_cache = np.asarray(simulate_walks(PaddedGraph.build(g, cap=cap),
+                                            np.arange(g.n), 0, PARAMS))
+        assert np.array_equal(w_base, w_cache), f"cap={cap}"
+
+
+def test_dead_end_stays():
+    g = CSRGraph.from_edges(4, [0], [1])  # vertices 2,3 isolated
+    pg = PaddedGraph.build(g)
+    walks = np.asarray(simulate_walks(pg, np.arange(4), 0,
+                                      WalkParams(length=5)))
+    assert np.all(walks[2] == 2) and np.all(walks[3] == 3)
+
+
+def test_approx_mode_diverges_only_at_hot_vertices(skewed_graph):
+    """FN-Approx contract: the first step where an approx walk departs from
+    the exact walk must be a step taken *from a popular (hot) vertex* — cold
+    transitions are always exact."""
+    g = skewed_graph
+    cap = 24
+    pg = PaddedGraph.build(g, cap=cap)
+    exact = np.asarray(simulate_walks(pg, np.arange(g.n), 0, PARAMS))
+    approx = np.asarray(simulate_walks(
+        pg, np.arange(g.n), 0,
+        WalkParams(p=0.5, q=2.0, length=12, mode="approx", approx_eps=5e-2)))
+    _check_valid(g, approx)
+    deg = g.deg
+    n_diverged = 0
+    for i in range(g.n):
+        diff = np.nonzero(exact[i] != approx[i])[0]
+        if len(diff) == 0:
+            continue
+        n_diverged += 1
+        s = diff[0]
+        v_at = exact[i, s - 1] if s > 0 else i  # vertex the step left from
+        assert deg[v_at] > cap, (i, s, v_at, deg[v_at])
+    assert n_diverged > 0  # approximation actually kicked in on this graph
+
+
+def test_first_step_distribution(small_graph):
+    """Step-0 draws follow static edge weights (alias correctness in situ)."""
+    g = small_graph
+    v = int(np.argmax(g.deg))
+    nb, w = g.neighbors(v), g.weights(v)
+    pg = PaddedGraph.build(g)
+    starts = np.full(6000, v, np.int32)
+    walker_ids = jnp.arange(6000, dtype=jnp.int32)
+    walks = np.asarray(simulate_walks(pg, starts, 0,
+                                      WalkParams(length=1),
+                                      walker_ids=walker_ids))
+    counts = np.array([(walks[:, 0] == x).mean() for x in nb])
+    np.testing.assert_allclose(counts, w / w.sum(), atol=0.03)
+
+
+def test_second_step_distribution():
+    """One 2nd-order step matches the brute-force oracle frequencies."""
+    g = rmat.wec(6, avg_degree=10, seed=5)
+    pg = PaddedGraph.build(g)
+    v = int(np.argmax(g.deg))
+    p, q = 0.5, 2.0
+    starts = np.full(8000, v, np.int32)
+    walks = np.asarray(simulate_walks(
+        pg, starts, 3, WalkParams(p=p, q=q, length=2),
+        walker_ids=jnp.arange(8000, dtype=jnp.int32)))
+    # group by first step u' (walk v -> u' -> x); compare x frequencies
+    first, second = walks[:, 0], walks[:, 1]
+    for uprime in np.unique(first)[:3]:
+        sel = first == uprime
+        if sel.sum() < 500 or g.deg[uprime] == 0:
+            continue
+        oracle = brute_force_probs(g, v, int(uprime), p, q)
+        xs = second[sel]
+        for x, pr in oracle.items():
+            np.testing.assert_allclose((xs == x).mean(), pr, atol=0.06)
+
+
+def test_spark_trim_baseline_changes_walks(skewed_graph):
+    """The Spark-Node2Vec trim (30 top-weight edges) visibly distorts the
+    walk distribution on a skewed graph (paper §2.2 / Fig. 6 setup)."""
+    g = skewed_graph
+    trimmed = g.trim_top_weights(5)
+    pg_t = PaddedGraph.build(trimmed)
+    walks = np.asarray(simulate_walks(pg_t, np.arange(g.n), 0, PARAMS))
+    counts = trimmed.row_ptr[1:] - trimmed.row_ptr[:-1]
+    assert counts.max() <= 5
+    # trimmed walks never use edges outside the trimmed graph
+    _check_valid(trimmed, walks)
