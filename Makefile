@@ -1,0 +1,10 @@
+.PHONY: ci fast bench
+
+ci:            ## tier-1: full test suite (the per-PR bar)
+	scripts/ci.sh tier1
+
+fast:          ## tier-1 minus `slow` (distributed / subprocess) tests
+	scripts/ci.sh fast
+
+bench:         ## run the benchmark battery (CSV rows to stdout)
+	PYTHONPATH=src python -m benchmarks.run

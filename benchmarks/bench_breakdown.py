@@ -10,22 +10,19 @@ import numpy as np
 
 from benchmarks.common import row
 from repro.core import rmat
-from repro.core.graph import PaddedGraph
 from repro.core.node2vec import Node2VecConfig, train_embeddings
-from repro.core.walk import WalkParams, simulate_walks
+from repro.engine import WalkEngine
 
 
 def run():
     g = rmat.wec(10, avg_degree=20, seed=0)
     cfg = Node2VecConfig(p=1.0, q=2.0, walk_length=40, num_walks=2, dim=32,
                          window=5, epochs=1, batch_size=4096)
-    pg = PaddedGraph.build(g)
-    params = WalkParams(p=cfg.p, q=cfg.q, length=cfg.walk_length)
+    eng = WalkEngine.build(g, cfg.plan())
     # warmup compile
-    np.asarray(simulate_walks(pg, np.arange(g.n), 0, params))
+    eng.run(seed=0)
     t0 = time.perf_counter()
-    walks = [np.asarray(simulate_walks(pg, np.arange(g.n), r, params))
-             for r in range(cfg.num_walks)]
+    walks = [r.walks for r in eng.rounds(cfg.num_walks, seed=cfg.seed)]
     t_walk = time.perf_counter() - t0
     walks = np.concatenate(walks, 0)
     t0 = time.perf_counter()

@@ -14,7 +14,7 @@ from benchmarks.common import row, time_fn
 from repro.core import rmat
 from repro.core.graph import PaddedGraph
 from repro.core.transition import unnormalized_probs
-from repro.core.walk import WalkParams, simulate_walks
+from repro.engine import WalkEngine, WalkPlan
 
 
 def _spark_emulation_precompute(g, p, q):
@@ -48,30 +48,27 @@ def run():
     for k, avg in [(9, 20), (10, 30)]:
         g = rmat.wec(k, avg_degree=avg, seed=0)
         length = 40
-        starts = np.arange(g.n)
 
         # spark emulation: trim + full pair precompute + walk
         trimmed = g.trim_top_weights(8)
         t_pre, pre_bytes = _spark_emulation_precompute(trimmed, p, q)
-        pg_t = PaddedGraph.build(trimmed)
-        us_walk = time_fn(
-            lambda: simulate_walks(pg_t, starts, 0,
-                                   WalkParams(p=p, q=q, length=length)))
+        eng_t = WalkEngine.build(trimmed, WalkPlan(p=p, q=q, length=length))
+        us_walk = time_fn(lambda: eng_t.run(seed=0).walks)
         spark_total = t_pre * 1e6 + us_walk
         row(f"efficiency_spark_sim_k{k}", spark_total,
             f"precompute_bytes={pre_bytes}")
 
         engines = {
-            "fn_base": (PaddedGraph.build(g), "exact"),
-            "fn_cache": (PaddedGraph.build(g, cap=24), "exact"),
-            "fn_approx": (PaddedGraph.build(g, cap=24), "approx"),
+            "fn_base": WalkEngine.build(
+                g, WalkPlan(p=p, q=q, length=length)),
+            "fn_cache": WalkEngine.build(
+                g, WalkPlan(p=p, q=q, length=length, cap=24)),
+            "fn_approx": WalkEngine.build(
+                g, WalkPlan(p=p, q=q, length=length, cap=24, mode="approx",
+                            approx_eps=5e-2)),
         }
-        for name, (pg, mode) in engines.items():
-            us = time_fn(
-                lambda pg=pg, mode=mode: simulate_walks(
-                    pg, starts, 0,
-                    WalkParams(p=p, q=q, length=length, mode=mode,
-                               approx_eps=5e-2)))
+        for name, eng in engines.items():
+            us = time_fn(lambda eng=eng: eng.run(seed=0).walks)
             row(f"efficiency_{name}_k{k}", us,
                 f"speedup_vs_spark={spark_total / us:.1f}x")
 

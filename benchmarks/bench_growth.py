@@ -9,16 +9,14 @@ import numpy as np
 
 from benchmarks.common import row
 from repro.core import rmat
-from repro.core.graph import PaddedGraph
-from repro.core.walk import WalkParams, simulate_walks
+from repro.engine import WalkEngine, WalkPlan
 
 
 def run():
     g = rmat.skew(4, k=11, avg_degree=40, seed=0)
     cap = 48
-    pg = PaddedGraph.build(g)
-    walks = np.asarray(simulate_walks(pg, np.arange(g.n), 0,
-                                      WalkParams(p=0.5, q=2.0, length=30)))
+    eng = WalkEngine.build(g, WalkPlan(p=0.5, q=2.0, length=30))
+    walks = eng.run(seed=0).walks
     deg = g.deg.astype(np.int64)
     hot = deg > cap
     # superstep 0 = walkers at their (uniform) start vertices — the paper's

@@ -3,22 +3,17 @@ should scale linearly in the number of vertices. CPU-scaled K; derived:
 time per vertex (flat => linear scaling, the paper's finding)."""
 from __future__ import annotations
 
-import numpy as np
-
 from benchmarks.common import row, time_fn
 from repro.core import rmat
-from repro.core.graph import PaddedGraph
-from repro.core.walk import WalkParams, simulate_walks
+from repro.engine import WalkEngine, WalkPlan
 
 
 def run():
     per_vertex = []
     for k in (10, 11, 12, 13):
         g = rmat.er(k, avg_degree=10, seed=0)
-        pg = PaddedGraph.build(g)
-        starts = np.arange(g.n)
-        us = time_fn(lambda: simulate_walks(
-            pg, starts, 0, WalkParams(p=0.5, q=2.0, length=40)))
+        eng = WalkEngine.build(g, WalkPlan(p=0.5, q=2.0, length=40))
+        us = time_fn(lambda: eng.run(seed=0).walks)
         per_vertex.append(us / g.n)
         row(f"scaling_er{k}", us, f"us_per_vertex={us / g.n:.2f}")
     lin = max(per_vertex) / max(min(per_vertex), 1e-9)

@@ -1,32 +1,30 @@
 """Paper Fig. 12/13/14 + Fig. 5 — Skew-S analysis: as degree skew grows,
 (1) walks concentrate on popular vertices (Fig. 5), (2) FN-Base slows down,
 (3) FN-Cache / FN-Approx win more (Fig. 13), (4) hot-message volume grows
-(Fig. 14 — here: the exact bytes FN-Cache keeps off the wire)."""
+(Fig. 14 — here: the exact bytes FN-Cache keeps off the wire).
+All engines run through the unified WalkEngine API."""
 from __future__ import annotations
 
 import numpy as np
 
 from benchmarks.common import row, time_fn
 from repro.core import rmat
-from repro.core.graph import PaddedGraph
-from repro.core.walk import WalkParams, simulate_walks
+from repro.engine import WalkEngine, WalkPlan
 
 
 def run():
     cap = 32
     for s in (1, 2, 3, 4, 5):
         g = rmat.skew(s, k=10, avg_degree=30, seed=0)
-        starts = np.arange(g.n)
-        wp = WalkParams(p=0.5, q=2.0, length=30)
-        pg_base = PaddedGraph.build(g)
-        pg_cache = PaddedGraph.build(g, cap=cap)
-        us_base = time_fn(lambda: simulate_walks(pg_base, starts, 0, wp))
-        us_cache = time_fn(lambda: simulate_walks(pg_cache, starts, 0, wp))
-        us_approx = time_fn(lambda: simulate_walks(
-            pg_cache, starts, 0,
-            WalkParams(p=0.5, q=2.0, length=30, mode="approx",
-                       approx_eps=5e-2)))
-        walks = np.asarray(simulate_walks(pg_base, starts, 0, wp))
+        base = dict(p=0.5, q=2.0, length=30)
+        eng_base = WalkEngine.build(g, WalkPlan(**base))
+        eng_cache = WalkEngine.build(g, WalkPlan(cap=cap, **base))
+        eng_approx = WalkEngine.build(
+            g, WalkPlan(cap=cap, mode="approx", approx_eps=5e-2, **base))
+        us_base = time_fn(lambda: eng_base.run(seed=0).walks)
+        us_cache = time_fn(lambda: eng_cache.run(seed=0).walks)
+        us_approx = time_fn(lambda: eng_approx.run(seed=0).walks)
+        walks = eng_base.run(seed=0).walks
         visits = np.bincount(walks.reshape(-1), minlength=g.n)
         deg = g.deg.astype(np.float64)
         corr = float(np.corrcoef(deg, visits[:g.n])[0, 1])
@@ -35,7 +33,7 @@ def run():
         # NEIG bytes a push-based engine would move for hot vertices per
         # superstep (what FN-Cache keeps off the wire): visits x deg x 8B
         hot_neig_bytes = int((visits[:g.n][hot] * deg[hot]).sum() * 8
-                             / wp.length)
+                             / eng_base.plan.length)
         row(f"skew{s}_fn_base", us_base,
             f"deg_visit_corr={corr:.2f};hot_visit_share={hot_visit_share:.2f}")
         row(f"skew{s}_fn_cache", us_cache,

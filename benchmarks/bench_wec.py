@@ -1,34 +1,32 @@
 """Paper Fig. 10/11 — WeC-K graphs (WeChat-like, skewed, avg degree ~100
-scaled down): FN-Cache and FN-Approx improvements + linear scaling in K."""
+scaled down): FN-Cache and FN-Approx improvements + linear scaling in K.
+All engines run through the unified WalkEngine API."""
 from __future__ import annotations
-
-import numpy as np
 
 from benchmarks.common import row, time_fn
 from repro.core import rmat
-from repro.core.graph import PaddedGraph
-from repro.core.walk import WalkParams, simulate_walks
+from repro.engine import WalkEngine, WalkPlan
 
 
 def run():
     cap = 32
     for k in (9, 10, 11):
         g = rmat.wec(k, avg_degree=40, seed=0)
-        starts = np.arange(g.n)
-        wp = WalkParams(p=2.0, q=0.5, length=30)
-        pg_base = PaddedGraph.build(g)
-        pg_cache = PaddedGraph.build(g, cap=cap)
-        us_base = time_fn(lambda: simulate_walks(pg_base, starts, 0, wp))
-        us_cache = time_fn(lambda: simulate_walks(pg_cache, starts, 0, wp))
-        us_approx = time_fn(lambda: simulate_walks(
-            pg_cache, starts, 0,
-            WalkParams(p=2.0, q=0.5, length=30, mode="approx",
-                       approx_eps=5e-2)))
-        row(f"wec{k}_fn_base", us_base, f"us_per_vertex={us_base / g.n:.2f}")
-        row(f"wec{k}_fn_cache", us_cache,
-            f"speedup={us_base / us_cache:.2f}x")
-        row(f"wec{k}_fn_approx", us_approx,
-            f"speedup={us_base / us_approx:.2f}x")
+        base = dict(p=2.0, q=0.5, length=30)
+        engines = {
+            "fn_base": WalkEngine.build(g, WalkPlan(**base)),
+            "fn_cache": WalkEngine.build(g, WalkPlan(cap=cap, **base)),
+            "fn_approx": WalkEngine.build(
+                g, WalkPlan(cap=cap, mode="approx", approx_eps=5e-2, **base)),
+        }
+        us = {name: time_fn(lambda e=e: e.run(seed=0).walks)
+              for name, e in engines.items()}
+        row(f"wec{k}_fn_base", us["fn_base"],
+            f"us_per_vertex={us['fn_base'] / g.n:.2f}")
+        row(f"wec{k}_fn_cache", us["fn_cache"],
+            f"speedup={us['fn_base'] / us['fn_cache']:.2f}x")
+        row(f"wec{k}_fn_approx", us["fn_approx"],
+            f"speedup={us['fn_base'] / us['fn_approx']:.2f}x")
 
 
 if __name__ == "__main__":

@@ -1,6 +1,8 @@
 """Distributed Fast-Node2Vec across 8 (simulated) devices, with a mid-run
 "node failure" and an elastic resume on a DIFFERENT device count — the
-FN-Multi fault-tolerance story end to end.
+FN-Multi fault-tolerance story end to end, all through the unified
+WalkEngine API (the runner builds a ``backend="sharded"`` engine once and
+reuses its compiled walk across rounds).
 
     PYTHONPATH=src python examples/distributed_walks.py
 """
@@ -16,6 +18,7 @@ from jax.sharding import Mesh  # noqa: E402
 from repro.checkpoint.checkpointer import Checkpointer  # noqa: E402
 from repro.core import rmat  # noqa: E402
 from repro.core.node2vec import Node2VecConfig  # noqa: E402
+from repro.engine import WalkEngine  # noqa: E402
 from repro.runtime.balance import shard_balance  # noqa: E402
 from repro.runtime.fault_tolerance import WalkRoundRunner  # noqa: E402
 
@@ -29,6 +32,15 @@ print(f"shard balance: raw edge imbalance {rep.edge_imbalance:.2f}x, "
 cfg = Node2VecConfig(p=0.5, q=2.0, walk_length=20, num_walks=3, cap=32,
                      seed=7)
 mesh = Mesh(np.array(jax.devices()), ("rw",))
+
+# one-off engine run: the structured stats the old call path discarded
+eng = WalkEngine.build(graph, cfg.plan(mesh), mesh=mesh)
+res = eng.run(seed=7)
+print(f"engine stats: dropped={res.stats.dropped} "
+      f"supersteps={res.stats.supersteps} "
+      f"collective~{res.stats.collective_bytes / 2**20:.1f} MiB/dev "
+      f"(analytic NEIG estimate)")
+
 ckpt_dir = "/tmp/repro_example_walks"
 ck = Checkpointer(ckpt_dir)
 

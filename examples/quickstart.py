@@ -1,28 +1,39 @@
-"""Quickstart: Fast-Node2Vec end to end in ~30 lines.
+"""Quickstart: Fast-Node2Vec end to end in ~30 lines, through the unified
+WalkEngine API.
 
-Builds a small social-like RMAT graph, runs exact 2nd-order walks with the
-FN-Cache layout, trains SGNS embeddings, and prints nearest neighbors of the
-highest-degree vertex in embedding space.
+Builds a small social-like RMAT graph, declares a WalkPlan (FN-Cache layout,
+exact 2nd-order sampling), streams FN-Multi walk rounds from the engine,
+trains SGNS embeddings, and prints nearest neighbors of the highest-degree
+vertex in embedding space. Swap ``backend="reference"`` for ``"fused"``
+(Pallas step kernel) or ``"sharded"`` (multi-device) — same walks, same seed.
 
     PYTHONPATH=src python examples/quickstart.py
 """
 import numpy as np
 
 from repro.core import rmat
-from repro.core.node2vec import Node2VecConfig, node2vec
+from repro.core.node2vec import Node2VecConfig, train_embeddings
+from repro.engine import WalkEngine, WalkPlan
 
 graph = rmat.wec(10, avg_degree=30, seed=0)          # 1024 vertices
 print(f"graph: {graph.n} vertices, {graph.m} edges, "
       f"max degree {graph.max_degree}")
 
-cfg = Node2VecConfig(
+plan = WalkPlan(
     p=1.0, q=0.5,            # DFS-ish exploration (community features)
-    walk_length=40, num_walks=4, window=5,
-    dim=64, epochs=2, batch_size=4096,
+    length=40,
     cap=32,                  # FN-Cache layout: popular rows replicated
-    seed=0)
+    backend="reference")
+engine = WalkEngine.build(graph, plan)
 
-emb = node2vec(graph, cfg)
+rounds = list(engine.rounds(4, seed=0))              # FN-Multi: 4 rounds
+stats = rounds[0].stats
+print(f"round stats: backend={stats.backend} walkers={stats.walkers} "
+      f"supersteps={stats.supersteps} dropped={stats.dropped}")
+walks = np.concatenate([r.walks for r in rounds], axis=0)
+
+cfg = Node2VecConfig(window=5, dim=64, epochs=2, batch_size=4096, seed=0)
+emb = train_embeddings(graph, walks, cfg)
 print(f"embeddings: {emb.shape}")
 
 v = int(np.argmax(graph.deg))

@@ -13,9 +13,8 @@ import numpy as np
 
 from repro import configs
 from repro.core import rmat
-from repro.core.graph import PaddedGraph
-from repro.core.walk import WalkParams, simulate_walks
 from repro.data.corpus import walks_to_lm_tokens
+from repro.engine import WalkEngine, WalkPlan
 from repro.models import model as M
 from repro.optim.grad_utils import clip_by_global_norm
 from repro.optim.optimizers import adamw, apply_updates
@@ -27,9 +26,8 @@ args = ap.parse_args()
 
 cfg = configs.smoke_config(args.arch)
 graph = rmat.wec(9, avg_degree=15, seed=0)
-pg = PaddedGraph.build(graph)
-walks = np.asarray(simulate_walks(pg, np.arange(graph.n), 0,
-                                  WalkParams(p=1.0, q=0.5, length=64)))
+walks = WalkEngine.build(
+    graph, WalkPlan(p=1.0, q=0.5, length=64)).run(seed=0).walks
 tokens = walks_to_lm_tokens(walks % cfg.vocab, seq_len=33)
 print(f"arch={args.arch} corpus={tokens.shape}")
 

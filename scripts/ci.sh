@@ -1,0 +1,14 @@
+#!/usr/bin/env bash
+# Tier-1 CI entry point. Usage: scripts/ci.sh [tier1|fast]
+#   tier1 (default) — the full suite, the bar every PR must hold
+#   fast            — deselect `slow` (distributed/subprocess/bench-shaped)
+set -euo pipefail
+cd "$(dirname "$0")/.."
+export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+
+target="${1:-tier1}"
+case "$target" in
+  tier1) exec python -m pytest -x -q ;;
+  fast)  exec python -m pytest -x -q -m "not slow" ;;
+  *) echo "unknown target: $target (want tier1|fast)" >&2; exit 2 ;;
+esac

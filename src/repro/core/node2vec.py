@@ -1,14 +1,19 @@
 """End-to-end Node2Vec driver: graph -> Fast-Node2Vec walks -> SGNS embeddings.
 
 This composes the paper's two stages as a first-class framework feature. The
-walk stage runs r rounds (paper: r walks per vertex == FN-Multi rounds), each
-round being a checkpoint / elastic-rescale boundary; rounds overlap with SGNS
-training on the previous round's corpus (compute/"communication" overlap at
-the pipeline level).
+walk stage runs r rounds (paper: r walks per vertex == FN-Multi rounds)
+through ``repro.engine.WalkEngine`` — the single entry point over all walk
+backends — using its streaming ``rounds()`` iterator, so SGNS batch
+construction for round *k* overlaps the (async-dispatched) walk of round
+*k+1*. ``Node2VecConfig`` no longer duplicates the walk hyper-parameters in
+a second dataclass: :meth:`Node2VecConfig.plan` derives the ``WalkPlan`` and
+there is no ``mesh is None`` branch anywhere — backend selection is the
+plan's job.
 """
 from __future__ import annotations
 
 import dataclasses
+import warnings
 from typing import Optional
 
 import jax
@@ -16,12 +21,11 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import Mesh
 
-from repro.core.graph import CSRGraph, PaddedGraph
+from repro.core.graph import CSRGraph
 from repro.core.skipgram import (SGNSConfig, init_params, normalize_embeddings,
                                  train_step)
-from repro.core.walk import WalkParams, simulate_walks
-from repro.core.walk_distributed import distributed_walks
 from repro.data.corpus import walks_to_sgns_batches
+from repro.engine import WalkEngine, WalkPlan
 from repro.optim.optimizers import adam
 
 
@@ -37,27 +41,39 @@ class Node2VecConfig:
     epochs: int = 1
     batch_size: int = 1024
     lr: float = 0.025
-    mode: str = "exact"           # exact | approx
+    mode: str = "exact"           # exact | approx | approx_always
     approx_eps: float = 1e-3
     cap: Optional[int] = None     # cold row width (None -> FN-Base layout)
     seed: int = 0
+    backend: Optional[str] = None  # None -> sharded iff a mesh is given
+    capacity: Optional[int] = None  # sharded request capacity per dest
+    strict_drops: bool = False     # raise instead of warn on dropped requests
+
+    def plan(self, mesh: Optional[Mesh] = None) -> WalkPlan:
+        """The walk-stage half of this config as a ``WalkPlan`` — the single
+        source of walk hyper-parameters (no duplicated dataclass)."""
+        backend = self.backend or (
+            "sharded" if mesh is not None else "reference")
+        return WalkPlan(p=self.p, q=self.q, length=self.walk_length,
+                        mode=self.mode, approx_eps=self.approx_eps,
+                        backend=backend, cap=self.cap,
+                        capacity=self.capacity,
+                        strict_drops=self.strict_drops)
 
 
 def generate_walks(g: CSRGraph, cfg: Node2VecConfig,
                    mesh: Optional[Mesh] = None) -> np.ndarray:
     """All rounds of walks, [r * n, walk_length]."""
-    pg = PaddedGraph.build(g, cap=cfg.cap)
-    params = WalkParams(p=cfg.p, q=cfg.q, length=cfg.walk_length,
-                        mode=cfg.mode, approx_eps=cfg.approx_eps)
-    rounds = []
-    for r in range(cfg.num_walks):
-        seed = cfg.seed * 1000003 + r
-        if mesh is None:
-            w = simulate_walks(pg, np.arange(g.n), seed=seed, params=params)
-            rounds.append(np.asarray(w))
-        else:
-            w, drops = distributed_walks(pg, mesh, seed=seed, params=params)
-            rounds.append(np.asarray(w)[:g.n])
+    engine = WalkEngine.build(g, cfg.plan(mesh), mesh=mesh)
+    rounds, dropped = [], 0
+    for res in engine.rounds(cfg.num_walks, seed=cfg.seed):
+        rounds.append(res.walks)
+        dropped += res.stats.dropped
+    if dropped:
+        warnings.warn(
+            f"generate_walks: {dropped} dropped NEIG requests across "
+            f"{cfg.num_walks} rounds — the corpus under-samples those steps",
+            RuntimeWarning, stacklevel=2)
     return np.concatenate(rounds, axis=0)
 
 

@@ -1,9 +1,17 @@
-"""Single-device reference walk engine (FN-Base / FN-Cache / FN-Approx).
+"""Single-device walk engine (FN-Base / FN-Cache / FN-Approx) — the
+executable specification of the paper's Algorithm 1, and the substrate for
+two ``WalkEngine`` backends:
 
-This is the executable specification of the paper's Algorithm 1 and its
-optimizations, fully vectorized over walkers with a ``lax.scan`` over
-supersteps (one scan iteration == one Pregel superstep; the BSP barrier is
-implicit in SPMD dataflow).
+* ``"reference"`` — all sampling in plain jnp;
+* ``"fused"``     — the exact 2nd-order draw runs in the Pallas kernel
+  (``kernels.node2vec_step`` via the ``kernels.ops`` padding contract),
+  interpret mode off-TPU. Both are this module's ``run_reference`` with a
+  different :class:`~repro.engine.sampler.Sampler`.
+
+The walk is fully vectorized over walkers with a ``lax.scan`` over supersteps
+(one scan iteration == one Pregel superstep; the BSP barrier is implicit in
+SPMD dataflow). All sampling math lives in ``repro.engine.sampler`` —
+shared, not duplicated, with the distributed engine (DESIGN.md §3).
 
 RNG discipline: the key for walker ``i`` at step ``s`` is
 ``fold_in(fold_in(seed, i), s)`` — a pure function of (walker, step), never of
@@ -18,28 +26,37 @@ Modes:
   * ``approx`` — FN-Approx: at a popular (hot) vertex v reached from an
     unpopular u, if the Eq. 2-3 bound gap < eps, sample from the *static*
     1st-order alias table: O(1) instead of O(deg) (paper §3.4).
+
+DEPRECATED: ``simulate_walks`` is kept as a thin shim; new code goes through
+``repro.engine.WalkEngine`` (see DESIGN.md §4 for the deprecation path).
 """
 from __future__ import annotations
 
 import dataclasses
 import functools
+import warnings
 from typing import Optional
 
 import jax
 import jax.numpy as jnp
 
-from repro.core.alias import alias_sample
 from repro.core.graph import PAD_ID, PaddedGraph
-from repro.core.transition import approx_gap, sample_slot, unnormalized_probs
+from repro.engine.sampler import HotContext, Sampler, first_order_slots
 
 
 @dataclasses.dataclass(frozen=True)
 class WalkParams:
+    """Legacy walk hyper-parameters. Prefer ``repro.engine.WalkPlan``, which
+    adds the backend/layout knobs; this remains as the shim-level view."""
     p: float = 1.0
     q: float = 1.0
     length: int = 80
-    mode: str = "exact"          # "exact" | "approx"
+    mode: str = "exact"          # "exact" | "approx" | "approx_always"
     approx_eps: float = 1e-3
+
+    def sampler(self, fused: bool = False) -> Sampler:
+        return Sampler(p=self.p, q=self.q, mode=self.mode,
+                       eps=self.approx_eps, fused=fused)
 
 
 def walker_key(seed_key: jax.Array, walker_id: jnp.ndarray,
@@ -75,78 +92,68 @@ def unified_row(pg: PaddedGraph, v: jnp.ndarray):
     return ids, w, ap, ai, is_hot
 
 
-def _first_step(pg: PaddedGraph, v: jnp.ndarray, key: jax.Array):
-    """Step 0: 1st-order draw from static edge weights via the alias table."""
-    ids, _, ap, ai, _ = unified_row(pg, v)
-    slot = alias_sample(key, ap, ai, pg.deg[v])
-    nxt = ids[slot]
-    return jnp.where(pg.deg[v] > 0, nxt, v)
+def _batched_rows(pg: PaddedGraph, v: jnp.ndarray):
+    return jax.vmap(lambda vv: unified_row(pg, vv))(v)
 
 
-def _second_order_step(pg: PaddedGraph, u: jnp.ndarray, v: jnp.ndarray,
-                       prev_ids: jnp.ndarray, key: jax.Array,
-                       params: WalkParams):
-    """One 2nd-order move for one walker. Returns (next_id, v_row_ids)."""
-    ids, w, ap, ai, is_hot = unified_row(pg, v)
-    probs = unnormalized_probs(ids, w, u, prev_ids, params.p, params.q)
-    k_exact, k_approx = jax.random.split(key)
-    exact_slot = sample_slot(k_exact, probs)
-    if params.mode == "approx":
-        gap = approx_gap(pg.deg[u], pg.deg[v], pg.w_min[v], pg.w_max[v],
-                         params.p, params.q)
-        u_hot = pg.hot_pos[u] >= 0
-        use_approx = is_hot & (~u_hot) & (gap < params.approx_eps)
-        approx_slot = alias_sample(k_approx, ap, ai, pg.deg[v])
-        slot = jnp.where(use_approx, approx_slot, exact_slot)
-    elif params.mode == "approx_always":
-        # beyond-paper: hot vertices always take the O(1) alias path
-        # (semantics mirror of walk_distributed; quality measured in
-        # benchmarks/bench_accuracy)
-        approx_slot = alias_sample(k_approx, ap, ai, pg.deg[v])
-        slot = jnp.where(is_hot, approx_slot, exact_slot)
-    else:
-        slot = exact_slot
-    nxt = ids[slot]
-    nxt = jnp.where(pg.deg[v] > 0, nxt, v)  # dead end: stay
-    return nxt, ids
-
-
-@functools.partial(jax.jit, static_argnames=("params", "length"))
+@functools.partial(jax.jit, static_argnames=("sampler", "length"))
 def _simulate(pg: PaddedGraph, starts: jnp.ndarray, walker_ids: jnp.ndarray,
-              seed_key: jax.Array, params: WalkParams, length: int):
-    w = starts.shape[0]
-
+              seed_key: jax.Array, sampler: Sampler, length: int):
+    # step 0: 1st-order draw from static edge weights via the alias table
     k0 = jax.vmap(lambda i: walker_key(seed_key, i, 0))(walker_ids)
-    v1 = jax.vmap(lambda v, k: _first_step(pg, v, k))(starts, k0)
-    prev_ids0 = jax.vmap(lambda v: unified_row(pg, v)[0])(starts)
+    ids0, _, ap0, ai0, _ = _batched_rows(pg, starts)
+    deg0 = pg.deg[starts]
+    slot0 = first_order_slots(k0, ap0, ai0, deg0)
+    nxt0 = jnp.take_along_axis(ids0, slot0[:, None], axis=1)[:, 0]
+    v1 = jnp.where(deg0 > 0, nxt0, starts)
 
     def body(carry, s):
         u, v, prev_ids = carry
-        ks = jax.vmap(lambda i: walker_key(seed_key, i, s))(walker_ids)
-        nxt, v_ids = jax.vmap(
-            lambda uu, vv, pr, kk: _second_order_step(pg, uu, vv, pr, kk,
-                                                      params))(
-                u, v, prev_ids, ks)
-        return (v, nxt, v_ids), v
+        keys = jax.vmap(lambda i: walker_key(seed_key, i, s))(walker_ids)
+        ids, w, ap, ai, is_hot = _batched_rows(pg, v)
+        hot = None
+        if sampler.mode != "exact":
+            hot = HotContext(
+                is_hot_v=is_hot, is_hot_u=pg.hot_pos[u] >= 0,
+                deg_u=pg.deg[u], deg_v=pg.deg[v],
+                w_min_v=pg.w_min[v], w_max_v=pg.w_max[v],
+                alias_p=ap, alias_i=ai, alias_deg=pg.deg[v])
+        choice = sampler.choose(keys, ids, w, u, prev_ids, hot)
+        nxt = jnp.take_along_axis(ids, choice.slot()[:, None], axis=1)[:, 0]
+        nxt = jnp.where(pg.deg[v] > 0, nxt, v)  # dead end: stay
+        return (v, nxt, ids), v
 
     (_, v_last, _), steps = jax.lax.scan(
-        body, (starts, v1, prev_ids0), jnp.arange(1, length, dtype=jnp.int32))
+        body, (starts, v1, ids0), jnp.arange(1, length, dtype=jnp.int32))
     # walks[:, 0] = first sampled step, then one column per later step
     walks = jnp.concatenate(
         [steps.T, v_last[:, None]], axis=1) if length > 1 else v1[:, None]
     return walks
 
 
+def run_reference(pg: PaddedGraph, starts: jnp.ndarray,
+                  walker_ids: jnp.ndarray, seed_key: jax.Array,
+                  sampler: Sampler, length: int) -> jnp.ndarray:
+    """Single-device backend entry point used by ``WalkEngine``."""
+    return _simulate(pg, starts, walker_ids, seed_key, sampler=sampler,
+                     length=length)
+
+
 def simulate_walks(pg: PaddedGraph, starts: jnp.ndarray, seed: int,
                    params: WalkParams,
                    walker_ids: Optional[jnp.ndarray] = None) -> jnp.ndarray:
-    """Simulate ``len(starts)`` biased walks of ``params.length`` steps.
+    """DEPRECATED shim — use ``WalkEngine.build(graph, plan).run(...)``.
 
+    Simulates ``len(starts)`` biased walks of ``params.length`` steps.
     Returns [W, length] i32: the sampled steps (excluding the start vertex,
     matching Algorithm 1 which stores step[0] = first sampled move).
     """
+    warnings.warn(
+        "simulate_walks is deprecated; use repro.engine.WalkEngine "
+        "(WalkPlan(backend='reference'))", DeprecationWarning, stacklevel=2)
     starts = jnp.asarray(starts, jnp.int32)
     if walker_ids is None:
         walker_ids = jnp.arange(starts.shape[0], dtype=jnp.int32)
     key = jax.random.PRNGKey(seed)
-    return _simulate(pg, starts, walker_ids, key, params, params.length)
+    return run_reference(pg, starts, walker_ids, key, params.sampler(),
+                         params.length)

@@ -1,4 +1,5 @@
-"""Distributed Fast-Node2Vec walk engine (shard_map over the device mesh).
+"""Distributed Fast-Node2Vec walk engine (shard_map over the device mesh) —
+the ``"sharded"`` backend of ``repro.engine.WalkEngine``.
 
 Pregel -> TPU-SPMD mapping (see DESIGN.md §2):
 
@@ -22,34 +23,60 @@ Pregel -> TPU-SPMD mapping (see DESIGN.md §2):
   fetched — carried in walker state (Algorithm 1 line 22), cold width only;
   hot prev rows are re-read from the replicated cache at compute time.
 
+All sampling math (exact inverse-CDF draw, approx gating, alias fast path)
+lives in ``repro.engine.sampler`` and is shared verbatim with the reference
+and fused backends; this module only owns the *layout*: partitioning, the
+request/response exchange, and the candidate-row assembly.
+
 RNG keys are ``fold_in(seed, global_walker_id, step)`` — identical to the
 single-device reference, so distributed walks are **bit-identical** to
-``repro.core.walk.simulate_walks`` (validated in tests).
+the reference backend (validated in tests).
 
 Capacity: the request exchange has a static per-destination capacity ``C``.
 Requests beyond C are *dropped* (walker stays put for that step) and counted
-in the returned diagnostics; exact-mode callers size C so drops are zero
-(tests assert this). The paper's FN-Multi (walker rounds) is the production
-lever for bounding C — see ``runtime/fault_tolerance.py``.
+in the returned diagnostics (surfaced as ``WalkStats.dropped``); exact-mode
+callers size C so drops are zero (tests assert this). The paper's FN-Multi
+(walker rounds) is the production lever for bounding C — see
+``runtime/fault_tolerance.py``.
+
+DEPRECATED: ``distributed_walks`` is kept as a thin shim; new code goes
+through ``repro.engine.WalkEngine`` (DESIGN.md §4).
 """
 from __future__ import annotations
 
 import dataclasses
 import functools
+import inspect
+import warnings
 from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
-from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+from jax.sharding import Mesh, PartitionSpec as P
 
-from repro.core.alias import alias_sample
 from repro.core.graph import PAD_ID, PaddedGraph
-from repro.core.transition import (approx_gap, sample_slot,
-                                   unnormalized_probs)
 from repro.core.walk import WalkParams, walker_key
+from repro.engine.sampler import HotContext, Sampler, first_order_slots
 
 RW_AXIS = "rw"
+
+
+def _shard_map(f, mesh, in_specs, out_specs):
+    """Version-portable shard_map: jax.shard_map (new) falls back to
+    jax.experimental.shard_map (0.4.x); the replication-check kwarg was
+    renamed check_rep -> check_vma along the way, so gate on the signature."""
+    if hasattr(jax, "shard_map"):
+        sm = jax.shard_map
+    else:
+        from jax.experimental.shard_map import shard_map as sm
+    kwargs = {}
+    params = inspect.signature(sm).parameters
+    for flag in ("check_vma", "check_rep"):
+        if flag in params:
+            kwargs[flag] = False
+            break
+    return sm(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs, **kwargs)
 
 
 @functools.partial(
@@ -87,6 +114,10 @@ class ShardedGraph:
     @property
     def n_local(self) -> int:
         return self.n // self.num_shards
+
+    def hot_pack(self) -> tuple:
+        return (self.hot_ids, self.hot_adj, self.hot_wgt, self.hot_alias_p,
+                self.hot_alias_i, self.hot_deg, self.hot_wmin, self.hot_wmax)
 
     @staticmethod
     def build(pg: PaddedGraph, num_shards: int) -> "ShardedGraph":
@@ -165,7 +196,7 @@ def _widen(x: jnp.ndarray, width: int, fill) -> jnp.ndarray:
 
 def _sharded_step(g: ShardedGraph, adj, wgt, alias_p, alias_i, deg,
                   u, v, prev_ids, prev_deg, step, seed_key, walker_ids,
-                  params: WalkParams, capacity: int):
+                  sampler: Sampler, capacity: int):
     """One superstep for the local walker block (runs inside shard_map)."""
     num_shards = g.num_shards
     n_local = adj.shape[0]
@@ -201,7 +232,7 @@ def _sharded_step(g: ShardedGraph, adj, wgt, alias_p, alias_i, deg,
     cold_i = jnp.where(use_remote[:, None], remote_i, local_i)
     cold_w = jnp.where(use_remote[:, None], remote_w, local_w)
     hp = jnp.maximum(hot_pos_v, 0)
-    if params.mode == "approx_always":
+    if sampler.mode == "approx_always":
         # beyond-paper FN-Approx: popular vertices ALWAYS take the O(1)
         # alias path, so the exact-prob pass runs at cold width only and the
         # [W, hot_cap] candidate assembly disappears entirely (static shapes
@@ -221,35 +252,29 @@ def _sharded_step(g: ShardedGraph, adj, wgt, alias_p, alias_i, deg,
                          _widen(prev_ids, g.hot_cap, PAD_ID))
     deg_u = jnp.where(is_hot_u, g.hot_deg[hpu], prev_deg)
 
-    # --- 2nd-order sampling (identical math to the reference engine) ---
+    # --- 2nd-order sampling: the shared Sampler (same math, all backends) ---
     keys = jax.vmap(lambda i: walker_key(seed_key, i, step))(walker_ids)
-    probs = jax.vmap(
-        lambda ci, cw, uu, pr: unnormalized_probs(ci, cw, uu, pr, params.p,
-                                                  params.q))(
-            cand_i, cand_w, u, prev_row)
-    k_exact = jax.vmap(lambda k: jax.random.split(k)[0])(keys)
-    k_approx = jax.vmap(lambda k: jax.random.split(k)[1])(keys)
-    slot_exact = jax.vmap(sample_slot)(k_exact, probs)
-    if params.mode == "approx":
-        deg_v_hot = g.hot_deg[hp]
-        gap = approx_gap(deg_u, deg_v_hot, g.hot_wmin[hp], g.hot_wmax[hp],
-                         params.p, params.q)
-        use_approx = is_hot_v & (~is_hot_u) & (gap < params.approx_eps)
-        slot_ap = jax.vmap(alias_sample)(k_approx, g.hot_alias_p[hp],
-                                         g.hot_alias_i[hp], g.hot_deg[hp])
-        pick = jnp.where(use_approx, slot_ap, slot_exact)
-        nxt = jnp.take_along_axis(cand_i, pick[:, None], axis=1)[:, 0]
-    elif params.mode == "approx_always":
-        slot_ap = jax.vmap(alias_sample)(k_approx, g.hot_alias_p[hp],
-                                         g.hot_alias_i[hp], g.hot_deg[hp])
-        nxt_hot = g.hot_adj[hp, slot_ap]       # [W] gather, O(1)/walker
-        nxt_cold = jnp.take_along_axis(cand_i, slot_exact[:, None],
+    hot = None
+    if sampler.mode != "exact":
+        hot = HotContext(
+            is_hot_v=is_hot_v, is_hot_u=is_hot_u,
+            deg_u=deg_u, deg_v=g.hot_deg[hp],
+            w_min_v=g.hot_wmin[hp], w_max_v=g.hot_wmax[hp],
+            alias_p=g.hot_alias_p[hp], alias_i=g.hot_alias_i[hp],
+            alias_deg=g.hot_deg[hp])
+    choice = sampler.choose(keys, cand_i, cand_w, u, prev_row, hot)
+    if sampler.mode == "approx_always":
+        # candidates stayed at cold width: hot next-ids come straight from
+        # the replicated cache ([W] gather, O(1)/walker)
+        nxt_hot = g.hot_adj[hp, choice.slot_alias]
+        nxt_cold = jnp.take_along_axis(cand_i, choice.slot_exact[:, None],
                                        axis=1)[:, 0]
-        nxt = jnp.where(is_hot_v, nxt_hot, nxt_cold)
+        nxt = jnp.where(choice.use_alias, nxt_hot, nxt_cold)
     else:
-        nxt = jnp.take_along_axis(cand_i, slot_exact[:, None], axis=1)[:, 0]
+        nxt = jnp.take_along_axis(cand_i, choice.slot()[:, None],
+                                  axis=1)[:, 0]
     deg_v = jnp.sum(cand_w > 0, axis=1).astype(jnp.int32)
-    if params.mode == "approx_always":
+    if sampler.mode == "approx_always":
         deg_v = jnp.where(is_hot_v, g.hot_deg[hp], deg_v)
     alive = (deg_v > 0) & ~dropped
     nxt = jnp.where(alive, nxt, v)
@@ -275,7 +300,7 @@ def _first_step_local(g: ShardedGraph, adj, wgt, alias_p, alias_i, deg,
     ids = jnp.where(is_hot[:, None], g.hot_adj[hp],
                     _widen(adj[li], g.hot_cap, PAD_ID))
     keys = jax.vmap(lambda i: walker_key(seed_key, i, 0))(walker_ids)
-    slots = jax.vmap(alias_sample)(keys, ap, ai, deg[li])
+    slots = first_order_slots(keys, ap, ai, deg[li])
     nxt = jnp.take_along_axis(ids, slots[:, None], axis=1)[:, 0]
     nxt = jnp.where(deg[li] > 0, nxt, starts)
     prev_ids = adj[li]
@@ -289,6 +314,7 @@ def make_distributed_walk(g: ShardedGraph, mesh: Mesh, params: WalkParams,
     into the ``rw`` axis via an abstract mesh reshape is the caller's job —
     this function expects a 1-D mesh with axis name 'rw')."""
     length = length or params.length
+    sampler = params.sampler() if isinstance(params, WalkParams) else params
     pspec_rows = P(RW_AXIS)
     rep = P()
 
@@ -305,7 +331,7 @@ def make_distributed_walk(g: ShardedGraph, mesh: Mesh, params: WalkParams,
             u, v, p_ids, p_deg, drops = carry
             nxt, np_ids, deg_v, dropped = _sharded_step(
                 gl, adj, wgt, alias_p, alias_i, deg, u, v, p_ids, p_deg, s,
-                seed_key, walker_ids, params, capacity)
+                seed_key, walker_ids, sampler, capacity)
             drops = drops + jnp.sum(dropped.astype(jnp.int32))
             return (v, nxt, np_ids, deg_v, drops), v
 
@@ -315,12 +341,11 @@ def make_distributed_walk(g: ShardedGraph, mesh: Mesh, params: WalkParams,
         walks = jnp.concatenate([steps.T, v_last[:, None]], axis=1)
         return walks, jax.lax.psum(drops, RW_AXIS)
 
-    shard_fn = jax.shard_map(
+    shard_fn = _shard_map(
         walk_body, mesh=mesh,
         in_specs=(pspec_rows, pspec_rows, pspec_rows, pspec_rows, pspec_rows,
                   rep, pspec_rows, pspec_rows, rep),
-        out_specs=(pspec_rows, rep),
-        check_vma=False)
+        out_specs=(pspec_rows, rep))
     return jax.jit(shard_fn)
 
 
@@ -328,11 +353,16 @@ def distributed_walks(pg: PaddedGraph, mesh: Mesh, seed: int,
                       params: WalkParams, capacity: Optional[int] = None,
                       starts: Optional[np.ndarray] = None
                       ) -> Tuple[jnp.ndarray, int]:
-    """Run walks for every vertex (or a round subset) on ``mesh``.
+    """DEPRECATED shim — use ``WalkEngine.build(graph, plan, mesh).run(...)``
+    with ``WalkPlan(backend="sharded")``.
 
-    Returns (walks [W, length] i32, dropped_request_count). The walk rows for
+    Runs walks for every vertex (or a round subset) on ``mesh``. Returns
+    (walks [W, length] i32, dropped_request_count). The walk rows for
     padding vertices (id >= pg.n) are self-loops and should be ignored.
     """
+    warnings.warn(
+        "distributed_walks is deprecated; use repro.engine.WalkEngine "
+        "(WalkPlan(backend='sharded'))", DeprecationWarning, stacklevel=2)
     num_shards = int(np.prod([mesh.shape[a] for a in mesh.axis_names]))
     g = ShardedGraph.build(pg, num_shards)
     if starts is None:
@@ -343,9 +373,7 @@ def distributed_walks(pg: PaddedGraph, mesh: Mesh, seed: int,
         capacity = starts.shape[0] // num_shards  # safe default: zero drops
     walker_ids = starts  # walker id == start vertex id (paper: 1 walk/vertex)
     fn = make_distributed_walk(g, mesh, params, capacity)
-    hot_pack = (g.hot_ids, g.hot_adj, g.hot_wgt, g.hot_alias_p, g.hot_alias_i,
-                g.hot_deg, g.hot_wmin, g.hot_wmax)
     key = jax.random.PRNGKey(seed)
-    walks, drops = fn(g.adj, g.wgt, g.alias_p, g.alias_i, g.deg, hot_pack,
+    walks, drops = fn(g.adj, g.wgt, g.alias_p, g.alias_i, g.deg, g.hot_pack(),
                       jnp.asarray(starts), jnp.asarray(walker_ids), key)
     return walks, int(drops)

@@ -1,0 +1,34 @@
+"""repro.engine — the single entry point for running Node2Vec walks.
+
+    from repro.engine import WalkEngine, WalkPlan
+
+    plan = WalkPlan(p=0.5, q=2.0, length=80, cap=32, backend="sharded")
+    engine = WalkEngine.build(graph, plan, mesh=mesh)
+    result = engine.run(seed=0)             # -> WalkResult(walks, stats)
+    for r in engine.rounds(10, seed=0):     # FN-Multi streaming rounds
+        train_on(r.walks)
+
+Backends: ``reference`` (single-device jnp), ``sharded`` (shard_map over the
+device mesh), ``fused`` (Pallas 2nd-order step kernel; interpret off-TPU).
+All three share one sampling implementation (``repro.engine.sampler``) and
+produce bit-identical walks from the same plan + seed (tested).
+
+The legacy entry points ``core.walk.simulate_walks`` and
+``core.walk_distributed.distributed_walks`` are deprecated shims over this
+API (DESIGN.md §4).
+"""
+from repro.engine.plan import BACKENDS, WalkPlan, WalkResult, WalkStats
+from repro.engine.sampler import Sampler
+
+__all__ = ["BACKENDS", "Sampler", "WalkEngine", "WalkPlan", "WalkResult",
+           "WalkStats", "round_seed"]
+
+
+def __getattr__(name):
+    # WalkEngine is resolved lazily: engine.engine imports the backend
+    # modules, which themselves import repro.engine.sampler — eager import
+    # here would make that a cycle.
+    if name in ("WalkEngine", "round_seed"):
+        from repro.engine import engine as _engine
+        return getattr(_engine, name)
+    raise AttributeError(f"module 'repro.engine' has no attribute {name!r}")

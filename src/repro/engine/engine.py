@@ -1,0 +1,249 @@
+"""WalkEngine — one entry point over the reference, sharded, and fused
+backends (DESIGN.md §3).
+
+    engine = WalkEngine.build(graph, plan, mesh=None)
+    result = engine.run(starts=None, seed=0)     # WalkResult(walks, stats)
+    for r in engine.rounds(10, seed=0): ...      # FN-Multi streaming rounds
+
+``build`` accepts a host :class:`CSRGraph` (padded layout derived from the
+plan's cap/hot_cap), a prebuilt :class:`PaddedGraph`, or — for the sharded
+backend only — a :class:`ShardedGraph`, which may be fully *abstract*
+(``jax.ShapeDtypeStruct`` leaves) for compile-only roofline analysis via
+:meth:`WalkEngine.analyze` (the dry-run path).
+
+Walker identity: ``walker_ids`` default to the start vertex ids (the paper's
+one-walk-per-vertex convention, and what the sharded partitioning requires),
+so the same plan + seed gives bit-identical walks on every backend.
+"""
+from __future__ import annotations
+
+import time
+import warnings
+from typing import Iterator, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh
+
+from repro.core.graph import PaddedGraph
+from repro.core.walk import run_reference
+from repro.core.walk_distributed import (ShardedGraph, make_distributed_walk)
+from repro.engine.plan import WalkPlan, WalkResult, WalkStats
+from repro.launch.mesh import make_rw_mesh
+from repro.roofline import analysis as roof
+from repro.roofline.traffic import walk_collective_bytes
+
+
+def round_seed(seed: int, r: int) -> int:
+    """Per-round seed for FN-Multi rounds (stable across engine versions —
+    checkpointed runs resume bit-identically)."""
+    return seed * 1000003 + r
+
+
+class WalkEngine:
+    """Executable walk workload: a plan bound to a graph (and mesh)."""
+
+    def __init__(self, plan: WalkPlan, *, pg: Optional[PaddedGraph] = None,
+                 sg: Optional[ShardedGraph] = None,
+                 mesh: Optional[Mesh] = None, fn=None,
+                 capacity: Optional[int] = None):
+        self.plan = plan
+        self.pg = pg
+        self.sg = sg
+        self.mesh = mesh
+        self._fn = fn
+        self.capacity = capacity
+        self._sampler = plan.sampler()
+
+    # ------------------------------------------------------------- build --
+    @classmethod
+    def build(cls, graph, plan: WalkPlan,
+              mesh: Optional[Mesh] = None) -> "WalkEngine":
+        """Bind ``plan`` to ``graph``. ``mesh`` is only consulted by the
+        sharded backend (default: a 1-D 'rw' mesh over all devices)."""
+        if isinstance(graph, ShardedGraph) and plan.backend != "sharded":
+            raise ValueError(
+                f"ShardedGraph input requires backend='sharded', "
+                f"got {plan.backend!r}")
+        if plan.backend in ("reference", "fused"):
+            pg = graph if isinstance(graph, PaddedGraph) else \
+                PaddedGraph.build(graph, cap=plan.cap, hot_cap=plan.hot_cap)
+            return cls(plan, pg=pg)
+
+        rw = make_rw_mesh(mesh)
+        num_shards = int(np.prod([rw.shape[a] for a in rw.axis_names]))
+        pg = None
+        if isinstance(graph, ShardedGraph):
+            sg = graph
+            if sg.num_shards != num_shards:
+                raise ValueError(
+                    f"ShardedGraph built for {sg.num_shards} shards but the "
+                    f"mesh has {num_shards} devices")
+        else:
+            pg = graph if isinstance(graph, PaddedGraph) else \
+                PaddedGraph.build(graph, cap=plan.cap, hot_cap=plan.hot_cap)
+            sg = ShardedGraph.build(pg, num_shards)
+        # capacity default = one full walker block per destination: zero
+        # drops, any skew. FN-Multi rounds are the lever for lowering it.
+        capacity = plan.capacity if plan.capacity is not None else sg.n_local
+        fn = make_distributed_walk(sg, rw, plan.params(), capacity,
+                                   length=plan.length)
+        return cls(plan, pg=pg, sg=sg, mesh=rw, fn=fn, capacity=capacity)
+
+    # --------------------------------------------------------------- run --
+    @property
+    def n(self) -> int:
+        """Number of real (unpadded) vertices."""
+        return self.sg.n_orig if self.sg is not None else self.pg.n
+
+    def _abstract(self) -> bool:
+        return self.sg is not None and isinstance(self.sg.adj,
+                                                  jax.ShapeDtypeStruct)
+
+    def _sharded_args(self, starts, walker_ids, key):
+        g = self.sg
+        return (g.adj, g.wgt, g.alias_p, g.alias_i, g.deg, g.hot_pack(),
+                starts, walker_ids, key)
+
+    def _dispatch(self, starts, seed: int, walker_ids):
+        """Launch one run asynchronously; returns (walks, drops, slice_to)."""
+        key = jax.random.PRNGKey(seed)
+        if self.plan.backend in ("reference", "fused"):
+            if starts is None:
+                starts = np.arange(self.pg.n, dtype=np.int32)
+            starts = jnp.asarray(starts, jnp.int32)
+            walker_ids = starts if walker_ids is None else \
+                jnp.asarray(walker_ids, jnp.int32)
+            walks = run_reference(self.pg, starts, walker_ids, key,
+                                  self._sampler, self.plan.length)
+            return walks, None, None
+
+        if self._abstract():
+            raise ValueError("engine was built from an abstract ShardedGraph"
+                             " — only analyze() is available")
+        slice_to = None
+        if starts is None:
+            starts = np.arange(self.sg.n, dtype=np.int32)
+            slice_to = self.sg.n_orig   # padding vertices walk self-loops
+        starts = np.asarray(starts, np.int32)
+        if starts.shape[0] % self.sg.num_shards:
+            raise ValueError(
+                f"walker count {starts.shape[0]} must divide evenly over "
+                f"{self.sg.num_shards} shards")
+        # walkers are co-located with their start vertex: walker block s gets
+        # starts[s*W:(s+1)*W] and reads the start row locally, so each start
+        # must live on the shard its position lands on (else the first step
+        # would silently clamp to a wrong local row).
+        w_local = starts.shape[0] // self.sg.num_shards
+        owner = starts // self.sg.n_local
+        placed = np.arange(starts.shape[0]) // w_local
+        if not np.array_equal(owner, placed):
+            bad = int(np.nonzero(owner != placed)[0][0])
+            raise ValueError(
+                f"starts must be grouped by owning shard (vertex id // "
+                f"{self.sg.n_local}): starts[{bad}]={int(starts[bad])} "
+                f"belongs to shard {int(owner[bad])} but is placed on shard "
+                f"{int(placed[bad])}")
+        walker_ids = starts if walker_ids is None else \
+            np.asarray(walker_ids, np.int32)
+        walks, drops = self._fn(*self._sharded_args(
+            jnp.asarray(starts), jnp.asarray(walker_ids), key))
+        return walks, drops, slice_to
+
+    def _finalize(self, dispatched) -> WalkResult:
+        walks, drops, slice_to = dispatched
+        walks = np.asarray(walks)
+        if slice_to is not None:
+            walks = walks[:slice_to]
+        dropped = int(drops) if drops is not None else 0
+        if dropped:
+            msg = (f"{dropped} NEIG requests dropped (capacity="
+                   f"{self.capacity}); affected walkers stayed put for those"
+                   f" steps — raise WalkPlan.capacity or walk fewer vertices"
+                   f" per round (FN-Multi)")
+            if self.plan.strict_drops:
+                raise RuntimeError(msg)
+            warnings.warn(msg, RuntimeWarning, stacklevel=3)
+        stats = WalkStats(
+            backend=self.plan.backend, walkers=int(walks.shape[0]),
+            supersteps=self.plan.length, dropped=dropped,
+            collective_bytes=self._collective_estimate())
+        return WalkResult(walks=walks, stats=stats)
+
+    def _collective_estimate(self) -> int:
+        if self.sg is None:
+            return 0
+        w_bytes = np.dtype(self.sg.wgt.dtype).itemsize
+        return walk_collective_bytes(self.sg.num_shards, self.capacity,
+                                     self.sg.cap, self.plan.length,
+                                     w_bytes=w_bytes)
+
+    def run(self, starts=None, seed: int = 0, walker_ids=None) -> WalkResult:
+        """Walk ``starts`` (default: every vertex) with the bound plan."""
+        return self._finalize(self._dispatch(starts, seed, walker_ids))
+
+    def rounds(self, num_rounds: int, seed: int = 0,
+               start: int = 0) -> Iterator[WalkResult]:
+        """FN-Multi streaming rounds: round ``k+1`` is *dispatched* (async
+        jax execution) before round ``k`` is finalized and yielded, so the
+        consumer (SGNS training) overlaps with the next round's walk."""
+        if num_rounds <= start:
+            return
+        pending = self._dispatch(None, round_seed(seed, start), None)
+        for r in range(start, num_rounds):
+            nxt = self._dispatch(None, round_seed(seed, r + 1), None) \
+                if r + 1 < num_rounds else None
+            yield self._finalize(pending)
+            pending = nxt
+
+    # ----------------------------------------------------------- analyze --
+    def analyze(self, num_walkers: Optional[int] = None) -> dict:
+        """Compile-only roofline measurement for the sharded backend: lower +
+        compile the walk (works with an abstract ShardedGraph), then read
+        FLOPs from ``cost_analysis`` and collective bytes from the optimized
+        HLO. The superstep loop lowers to a ``while`` whose body appears once
+        in the HLO, and cost_analysis does not multiply through while loops
+        either (verified) — so the numbers are already per-superstep (plus a
+        small step-0 constant outside the loop)."""
+        if self.sg is None:
+            raise ValueError("analyze() requires the sharded backend")
+        g = self.sg
+        if num_walkers is None:
+            num_walkers = g.n
+        starts = jax.ShapeDtypeStruct((num_walkers,), jnp.int32)
+        key = jax.ShapeDtypeStruct((2,), jnp.uint32)
+        t0 = time.time()
+        lowered = self._fn.lower(*self._sharded_args(starts, starts, key))
+        compiled = lowered.compile()
+        t_compile = time.time() - t0
+        ca = roof.cost_dict(compiled.cost_analysis())
+        coll = roof.collective_bytes(compiled.as_text())
+        counts = coll.pop("_counts")
+        flops_step = float(ca.get("flops", 0.0))
+        coll_total = float(sum(coll.values()))
+        try:
+            arg_bytes = compiled.memory_analysis().argument_size_in_bytes
+        except Exception:
+            arg_bytes = None
+        graph_bytes = sum(
+            int(np.prod(x.shape)) * np.dtype(x.dtype).itemsize
+            for x in (g.adj, g.wgt, g.alias_p, g.alias_i)) // g.num_shards \
+            + sum(int(np.prod(x.shape)) * np.dtype(x.dtype).itemsize
+                  for x in g.hot_pack())
+        return {
+            "backend": self.plan.backend, "mode": self.plan.mode,
+            "cap": g.cap, "hot_cap": g.hot_cap, "capacity": self.capacity,
+            "shards": g.num_shards, "n": g.n,
+            "walkers_per_shard": num_walkers // g.num_shards,
+            "compile_seconds": t_compile,
+            "flops_per_step_per_dev": flops_step,
+            "coll_bytes_per_step_per_dev": coll_total,
+            "coll_by_op_per_step": dict(coll),
+            "coll_counts": counts,
+            "t_compute": flops_step / roof.PEAK_FLOPS,
+            "t_collective": coll_total / roof.LINK_BW,
+            "analytic_coll_bytes_per_dev": self._collective_estimate(),
+            "graph_bytes_per_dev": int(graph_bytes),
+            "argument_bytes_per_dev": arg_bytes,
+        }

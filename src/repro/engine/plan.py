@@ -1,0 +1,91 @@
+"""WalkPlan / WalkStats / WalkResult — the engine's declarative surface.
+
+A :class:`WalkPlan` is the single description of *what* to walk (p/q/length/
+mode/eps) and *how* (backend + layout/capacity knobs); :class:`WalkEngine`
+turns it into an executable. ``WalkStats`` is the structured diagnostics
+record the old call paths used to drop on the floor (dropped requests,
+superstep count, collective-bytes estimate from ``repro.roofline``).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import numpy as np
+
+BACKENDS = ("reference", "sharded", "fused")
+
+
+@dataclasses.dataclass(frozen=True)
+class WalkPlan:
+    """Frozen, hashable description of a walk workload.
+
+    Layout knobs (``cap``/``hot_cap``) select the paper's FN variant:
+    ``cap=None`` -> FN-Base (rows at max degree, no hot set);
+    ``cap < max degree`` -> FN-Cache (popular rows replicated). ``mode``
+    selects the sampling strategy (exact / approx / approx_always) and
+    ``backend`` the execution substrate — the same plan runs bit-identically
+    on all three backends (tested).
+    """
+    p: float = 1.0
+    q: float = 1.0
+    length: int = 80
+    mode: str = "exact"               # exact | approx | approx_always
+    approx_eps: float = 1e-3
+    backend: str = "reference"        # reference | sharded | fused
+    cap: Optional[int] = None         # cold row width (None -> FN-Base)
+    hot_cap: Optional[int] = None     # hot row width (None -> max hot degree)
+    capacity: Optional[int] = None    # sharded: request slots per destination
+    strict_drops: bool = False        # raise (not warn) when requests drop
+
+    def __post_init__(self):
+        if self.backend not in BACKENDS:
+            raise ValueError(
+                f"backend must be one of {BACKENDS}, got {self.backend!r}")
+        if self.length < 1:
+            raise ValueError(f"length must be >= 1, got {self.length}")
+
+    def params(self):
+        """Legacy ``WalkParams`` view (for the deprecated shims)."""
+        from repro.core.walk import WalkParams
+        return WalkParams(p=self.p, q=self.q, length=self.length,
+                          mode=self.mode, approx_eps=self.approx_eps)
+
+    def sampler(self):
+        from repro.engine.sampler import Sampler
+        return Sampler(p=self.p, q=self.q, mode=self.mode,
+                       eps=self.approx_eps, fused=self.backend == "fused")
+
+    @staticmethod
+    def from_params(params, **overrides) -> "WalkPlan":
+        """Lift a legacy ``WalkParams`` into a plan (shim entry points)."""
+        return WalkPlan(p=params.p, q=params.q, length=params.length,
+                        mode=params.mode, approx_eps=params.approx_eps,
+                        **overrides)
+
+
+@dataclasses.dataclass(frozen=True)
+class WalkStats:
+    """Structured per-run diagnostics.
+
+    ``dropped``            — NEIG requests beyond the static exchange
+                             capacity (walker stayed put for that step);
+                             always 0 on single-device backends.
+    ``supersteps``         — Pregel supersteps executed (== walk length).
+    ``collective_bytes``   — analytic per-device NEIG-exchange estimate from
+                             ``repro.roofline.traffic`` (0 off-mesh); the
+                             measured-from-HLO number comes from
+                             ``WalkEngine.analyze()``.
+    """
+    backend: str
+    walkers: int
+    supersteps: int
+    dropped: int = 0
+    collective_bytes: int = 0
+
+
+@dataclasses.dataclass(frozen=True)
+class WalkResult:
+    """Host-side walks [W, length] i32 plus their stats."""
+    walks: np.ndarray
+    stats: WalkStats

@@ -1,0 +1,154 @@
+"""Shared 2nd-order sampling layer — the ``Sampler`` strategy (DESIGN.md §3).
+
+Every walk backend draws the next step through this one implementation:
+
+* ``repro.core.walk``             — single-device reference engine (vmap),
+  which is also the **fused** backend: ``Sampler(fused=True)`` swaps the
+  exact-slot computation for the Pallas kernel ``kernels.node2vec_step``
+  (interpret mode off-TPU) with bit-identical results.
+* ``repro.core.walk_distributed`` — shard_map engine; candidate rows arrive
+  via the NEIG all_to_all instead of a local gather, but the sampling math is
+  this module, not a copy.
+* ``kernels/ref.py``              — the kernel's correctness oracle wraps
+  :func:`exact_slots` directly, so the contract is written exactly once.
+
+RNG contract (identical across backends, the bit-parity guarantee):
+given the per-(walker, step) key ``k = fold_in(fold_in(seed, walker), step)``:
+
+    k_exact, k_approx = split(k)
+    r          = uniform(k_exact)                     # ONE uniform per walker
+    slot_exact = count((cumsum(alpha * w) <= r * total) & valid)  # inv. CDF
+    slot_alias = alias_sample(k_approx, ...)          # O(1) fast path
+
+The count convention (count of cumsum entries <= target over valid lanes)
+matches the Pallas kernel bit for bit; trailing pad lanes carry zero
+probability so the draw is independent of the padded row width — FN-Base and
+FN-Cache layouts, and all three backends, produce identical walks.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.alias import alias_sample
+from repro.core.graph import PAD_ID
+from repro.core.transition import approx_gap, unnormalized_probs
+
+MODES = ("exact", "approx", "approx_always")
+
+
+def split_keys(keys: jax.Array):
+    """Per-walker (k_exact, k_approx) from a [W]-batch of step keys."""
+    k_exact = jax.vmap(lambda k: jax.random.split(k)[0])(keys)
+    k_approx = jax.vmap(lambda k: jax.random.split(k)[1])(keys)
+    return k_exact, k_approx
+
+
+def exact_slots(cand_ids: jnp.ndarray, cand_w: jnp.ndarray, u: jnp.ndarray,
+                prev_rows: jnp.ndarray, rand: jnp.ndarray, p: float,
+                q: float) -> jnp.ndarray:
+    """Batched exact 2nd-order draw — THE definition the Pallas kernel fuses.
+
+    cand_ids/cand_w [W, D] (PAD_ID / 0 padded, rows sorted), u [W],
+    prev_rows [W, Dp] (sorted N(u)), rand [W] uniforms in [0, 1).
+    Returns the sampled candidate slot per walker, [W] i32.
+    """
+    probs = jax.vmap(
+        lambda ci, cw, uu, pr: unnormalized_probs(ci, cw, uu, pr, p, q))(
+            cand_ids, cand_w, u, prev_rows)
+    cum = jnp.cumsum(probs, axis=-1)
+    target = rand[:, None] * cum[:, -1:]
+    valid = cand_ids != PAD_ID
+    slot = jnp.sum(((cum <= target) & valid).astype(jnp.int32), axis=-1)
+    return jnp.minimum(slot, cand_ids.shape[-1] - 1)
+
+
+def first_order_slots(keys: jax.Array, alias_p: jnp.ndarray,
+                      alias_i: jnp.ndarray, deg: jnp.ndarray) -> jnp.ndarray:
+    """Step-0 / fast-path draw from static edge weights (Vose alias), [W]."""
+    return jax.vmap(alias_sample)(keys, alias_p, alias_i, deg)
+
+
+@dataclasses.dataclass(frozen=True)
+class HotContext:
+    """Per-walker inputs the approx fast path needs, layout-free.
+
+    Both engines can supply these from their own storage (reference: the
+    PaddedGraph lookups; sharded: the replicated hot pack) — values only
+    matter where ``is_hot_v`` is true, so cold-walker lanes may carry
+    anything gather-safe.
+    """
+    is_hot_v: jnp.ndarray   # [W] bool — current vertex is popular
+    is_hot_u: jnp.ndarray   # [W] bool — previous vertex is popular
+    deg_u: jnp.ndarray      # [W] i32  true degree of u
+    deg_v: jnp.ndarray      # [W] i32  true degree of v (where hot)
+    w_min_v: jnp.ndarray    # [W] f32
+    w_max_v: jnp.ndarray    # [W] f32
+    alias_p: jnp.ndarray    # [W, Da] 1st-order alias table rows of v
+    alias_i: jnp.ndarray    # [W, Da]
+    alias_deg: jnp.ndarray  # [W] live width of the alias tables (deg of v)
+
+
+@dataclasses.dataclass(frozen=True)
+class StepChoice:
+    """Outcome of one superstep's sampling; the backend owns the id gather
+    (layouts differ: the sharded approx_always path keeps candidates at cold
+    width and reads hot ids from the replicated cache)."""
+    slot_exact: jnp.ndarray
+    slot_alias: Optional[jnp.ndarray] = None
+    use_alias: Optional[jnp.ndarray] = None
+
+    def slot(self) -> jnp.ndarray:
+        """Combined slot for backends whose candidate rows cover both paths."""
+        if self.use_alias is None:
+            return self.slot_exact
+        return jnp.where(self.use_alias, self.slot_alias, self.slot_exact)
+
+
+@dataclasses.dataclass(frozen=True)
+class Sampler:
+    """2nd-order step strategy: exact / approx / approx_always.
+
+    Frozen + hashable so it can ride through ``jax.jit`` as a static
+    argument. ``fused=True`` computes the exact slot with the Pallas kernel
+    (``kernels.ops.node2vec_step_op``, interpret mode off-TPU); the kernel
+    implements :func:`exact_slots` verbatim, so results are bit-identical.
+    """
+    p: float = 1.0
+    q: float = 1.0
+    mode: str = "exact"
+    eps: float = 1e-3
+    fused: bool = False
+
+    def __post_init__(self):
+        if self.mode not in MODES:
+            raise ValueError(f"mode must be one of {MODES}, got {self.mode!r}")
+
+    def exact(self, rand, cand_ids, cand_w, u, prev_rows) -> jnp.ndarray:
+        if self.fused:
+            from repro.kernels.ops import node2vec_step_op
+            return node2vec_step_op(cand_ids, cand_w, u, prev_rows, rand,
+                                    self.p, self.q)
+        return exact_slots(cand_ids, cand_w, u, prev_rows, rand, self.p,
+                           self.q)
+
+    def choose(self, keys, cand_ids, cand_w, u, prev_rows,
+               hot: Optional[HotContext] = None) -> StepChoice:
+        """One superstep draw for a [W]-batch of walkers."""
+        k_exact, k_approx = split_keys(keys)
+        rand = jax.vmap(jax.random.uniform)(k_exact)
+        slot_exact = self.exact(rand, cand_ids, cand_w, u, prev_rows)
+        if self.mode == "exact" or hot is None:
+            return StepChoice(slot_exact)
+        slot_alias = first_order_slots(k_approx, hot.alias_p, hot.alias_i,
+                                       hot.alias_deg)
+        if self.mode == "approx":
+            gap = approx_gap(hot.deg_u, hot.deg_v, hot.w_min_v, hot.w_max_v,
+                             self.p, self.q)
+            use = hot.is_hot_v & (~hot.is_hot_u) & (gap < self.eps)
+        else:  # approx_always — beyond-paper O(1) path at EVERY hot vertex
+            use = hot.is_hot_v
+        return StepChoice(slot_exact, slot_alias, use)

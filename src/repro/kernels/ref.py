@@ -4,23 +4,14 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-from repro.core.graph import PAD_ID
-from repro.core.transition import sample_slot, unnormalized_probs
 
 
 def node2vec_step_ref(cand_ids, cand_w, u, prev_ids, rand, p, q):
-    """Reference for kernels.node2vec_step: same inverse-CDF convention
-    (count of cumsum entries <= r*total)."""
-
-    def one(ci, cw, uu, pr, r):
-        probs = unnormalized_probs(ci, cw, uu, pr, p, q)
-        cum = jnp.cumsum(probs)
-        target = r * cum[-1]
-        valid = ci != PAD_ID
-        slot = jnp.sum(((cum <= target) & valid).astype(jnp.int32))
-        return jnp.minimum(slot, ci.shape[-1] - 1)
-
-    return jax.vmap(one)(cand_ids, cand_w, u, prev_ids, rand)
+    """Reference for kernels.node2vec_step: the shared Sampler's exact draw
+    (count of cumsum entries <= r*total over valid lanes) — the contract is
+    written exactly once, in ``repro.engine.sampler.exact_slots``."""
+    from repro.engine.sampler import exact_slots
+    return exact_slots(cand_ids, cand_w, u, prev_ids, rand, p, q)
 
 
 def flash_attention_ref(q, k, v, window: int = 0, causal: bool = True):

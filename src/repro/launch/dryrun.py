@@ -165,7 +165,7 @@ def _opt_shardings(opt_shape, pspecs, mesh):
 # ---------------- per-cell analysis ----------------
 
 def _cost_dict(compiled) -> Dict[str, float]:
-    ca = compiled.cost_analysis() or {}
+    ca = roof.cost_dict(compiled.cost_analysis())
     return {"flops": float(ca.get("flops", 0.0) or 0.0),
             "bytes": float(ca.get("bytes accessed", 0.0) or 0.0)}
 

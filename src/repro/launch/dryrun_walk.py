@@ -4,14 +4,15 @@ os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
 """Dry-run of the paper's own computation: the distributed Fast-Node2Vec
 superstep on the production 512-chip mesh, at WeC-26 scale (2^26 vertices,
 avg degree ~100, max degree ~2.8k — paper Table 1), WITHOUT building the
-graph: every array is a ShapeDtypeStruct.
+graph: every array is a ShapeDtypeStruct, fed to the unified engine as an
+abstract ShardedGraph and measured via ``WalkEngine.analyze()``.
 
 Cells (the paper's algorithm progression, §3.4):
   fn_base    cap = max_degree, no hot set        (paper FN-Base)
   fn_cache   cap = 128, hot tail replicated      (paper FN-Cache)
   fn_approx  fn_cache + O(1) alias at hot v      (paper FN-Approx)
 plus beyond-paper variants used by the §Perf hillclimb (bf16 exchange
-payload, visit-aware request capacity).
+payload, visit-aware request capacity) — see EXPERIMENTS.md §Perf.
 
 The collective term here is the NEIG-message volume the paper's Figs. 4/14
 measure — on TPU it is the all_to_all operand bytes, read directly from the
@@ -20,18 +21,14 @@ lowered HLO.
   PYTHONPATH=src python -m repro.launch.dryrun_walk [--cell fn_base]
 """
 import argparse
-import dataclasses
 import json
-import time
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
-from repro.core.walk import WalkParams
-from repro.core.walk_distributed import ShardedGraph, make_distributed_walk
+from repro.core.walk_distributed import ShardedGraph
+from repro.engine import WalkEngine, WalkPlan
 from repro.launch.mesh import make_rw_mesh
-from repro.roofline import analysis as roof
 
 ART_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..",
                        "experiments", "dryrun_walk")
@@ -103,47 +100,11 @@ def run_cell(name: str, length: int = 4, save: bool = True):
     dtype_w = jnp.bfloat16 if name.endswith("bf16") else jnp.float32
     mesh = make_rw_mesh()
     g = abstract_graph(cap, hot_cap, dtype_w)
-    params = WalkParams(p=0.5, q=2.0, length=length, mode=mode,
-                        approx_eps=1e-3)
-    fn = make_distributed_walk(g, mesh, params, capacity, length=length)
-    w_total = W_LOCAL * SHARDS
-    starts = jax.ShapeDtypeStruct((w_total,), jnp.int32)
-    hot_pack = (g.hot_ids, g.hot_adj, g.hot_wgt, g.hot_alias_p,
-                g.hot_alias_i, g.hot_deg, g.hot_wmin, g.hot_wmax)
-    key = jax.ShapeDtypeStruct((2,), jnp.uint32)
-    t0 = time.time()
-    lowered = fn.lower(g.adj, g.wgt, g.alias_p, g.alias_i, g.deg, hot_pack,
-                       starts, starts, key)
-    compiled = lowered.compile()
-    t_compile = time.time() - t0
-    ca = compiled.cost_analysis() or {}
-    coll = roof.collective_bytes(compiled.as_text())
-    counts = coll.pop("_counts")
-    mem = compiled.memory_analysis()
-    # NOTE: the superstep loop lowers to a `while` whose body appears ONCE in
-    # the HLO text, and cost_analysis does not multiply through while loops
-    # either (verified) — so these numbers are already per-superstep (plus a
-    # small step-0 constant outside the loop).
-    coll_step = dict(coll)
-    flops_step = float(ca.get("flops", 0.0))
-    # graph residency per device (adj + weights + alias + hot cache)
-    graph_bytes = sum(np.prod(x.shape) * x.dtype.itemsize
-                      for x in (g.adj, g.wgt, g.alias_p, g.alias_i)
-                      ) // SHARDS + sum(
-        np.prod(x.shape) * x.dtype.itemsize for x in hot_pack)
-    art = {
-        "cell": name, "cap": cap, "hot_cap": hot_cap, "mode": mode,
-        "capacity": capacity, "walkers_per_shard": W_LOCAL,
-        "shards": SHARDS, "n": N, "compile_seconds": t_compile,
-        "flops_per_step_per_dev": flops_step,
-        "coll_bytes_per_step_per_dev": float(sum(coll_step.values())),
-        "coll_by_op_per_step": coll_step,
-        "coll_counts": counts,
-        "t_compute": flops_step / roof.PEAK_FLOPS,
-        "t_collective": sum(coll_step.values()) / roof.LINK_BW,
-        "graph_bytes_per_dev": int(graph_bytes),
-        "argument_bytes_per_dev": mem.argument_size_in_bytes,
-    }
+    plan = WalkPlan(p=0.5, q=2.0, length=length, mode=mode, approx_eps=1e-3,
+                    backend="sharded", capacity=capacity)
+    engine = WalkEngine.build(g, plan, mesh=mesh)
+    art = engine.analyze(num_walkers=W_LOCAL * SHARDS)
+    art["cell"] = name
     art["bottleneck"] = ("collective" if art["t_collective"] >
                          art["t_compute"] else "compute")
     if save:

@@ -34,13 +34,11 @@ import numpy as np
 from repro import configs
 from repro.checkpoint.checkpointer import Checkpointer
 from repro.core import rmat
-from repro.core.graph import PaddedGraph
 from repro.core.node2vec import Node2VecConfig, train_embeddings
 from repro.core.skipgram import SGNSConfig, init_params as sgns_init, \
     train_step as sgns_step
-from repro.core.walk import WalkParams
-from repro.core.walk_distributed import distributed_walks
 from repro.data.corpus import walks_to_lm_tokens, walks_to_sgns_batches
+from repro.engine import WalkEngine, WalkPlan
 from repro.launch.mesh import make_rw_mesh
 from repro.models import model as M
 from repro.optim.optimizers import adam, adamw, apply_updates
@@ -98,11 +96,8 @@ def run_lm(args):
 
     # corpus: walks over a small graph -> token sequences
     g = rmat.wec(max(args.k, 8), avg_degree=10, seed=args.seed)
-    pg = PaddedGraph.build(g)
-    from repro.core.walk import simulate_walks
-    walks = np.asarray(simulate_walks(
-        pg, np.arange(g.n), seed=args.seed,
-        params=WalkParams(p=1.0, q=1.0, length=64)))
+    walks = WalkEngine.build(
+        g, WalkPlan(p=1.0, q=1.0, length=64)).run(seed=args.seed).walks
     seq = args.seq
     tokens = walks_to_lm_tokens(walks % cfg.vocab, seq + 1)
     print(f"corpus: {tokens.shape[0]} sequences of {seq + 1} tokens")

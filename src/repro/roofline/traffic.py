@@ -27,6 +27,23 @@ BF16 = 2
 F32 = 4
 
 
+def walk_collective_bytes(num_shards: int, capacity: int, cap: int,
+                          length: int, w_bytes: int = F32) -> int:
+    """Analytic per-device NEIG-exchange bytes for one full walk
+    (``WalkStats.collective_bytes``).
+
+    Per superstep each device moves: the request buffer (S x C x 4B ids out)
+    plus the response rows (S x C x cap x (4B ids + w_bytes weights), two
+    tiled all_to_alls). Step 0 is purely local (walkers start co-located),
+    so there are ``length - 1`` exchanging supersteps. This is the quantity
+    the paper's Figs. 4/14 measure; the measured-from-HLO counterpart is
+    ``WalkEngine.analyze()``.
+    """
+    ids = 4
+    per_step = num_shards * capacity * (ids + cap * (ids + w_bytes))
+    return per_step * max(length - 1, 0)
+
+
 def _shards(mesh_shape: dict) -> tuple[int, int, int]:
     pod = mesh_shape.get("pod", 1)
     data = mesh_shape.get("data", 1)

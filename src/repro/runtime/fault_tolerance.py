@@ -23,10 +23,9 @@ import numpy as np
 from jax.sharding import Mesh
 
 from repro.checkpoint.checkpointer import Checkpointer
-from repro.core.graph import CSRGraph, PaddedGraph
+from repro.core.graph import CSRGraph
 from repro.core.node2vec import Node2VecConfig
-from repro.core.walk import WalkParams, simulate_walks
-from repro.core.walk_distributed import distributed_walks
+from repro.engine import WalkEngine, round_seed
 
 
 class WalkRoundRunner:
@@ -35,7 +34,9 @@ class WalkRoundRunner:
     Each round r simulates one walk per vertex with seed fold(seed, r). The
     checkpoint stores the completed rounds' walks; ``rounds()`` yields each
     round's walks as it completes (consumed by the SGNS training pipeline,
-    overlapping walk generation with optimization).
+    overlapping walk generation with optimization). Walks run through the
+    unified ``WalkEngine`` — the engine (and its compiled walk fn) is built
+    once per runner, so rounds never re-trace.
     """
 
     def __init__(self, g: CSRGraph, cfg: Node2VecConfig,
@@ -45,12 +46,14 @@ class WalkRoundRunner:
         self.cfg = cfg
         self.mesh = mesh
         self.ckpt = checkpointer
-        self.pg = PaddedGraph.build(g, cap=cfg.cap)
-
-    def _walk_params(self) -> WalkParams:
-        c = self.cfg
-        return WalkParams(p=c.p, q=c.q, length=c.walk_length, mode=c.mode,
-                          approx_eps=c.approx_eps)
+        # exact rounds must never drop: a dropped request silently skews the
+        # corpus, so upgrade the engine's warning to an error (the engine is
+        # the single owner of drop policy)
+        plan = cfg.plan(mesh)
+        if cfg.mode == "exact":
+            plan = dataclasses.replace(plan, strict_drops=True)
+        self.engine = WalkEngine.build(g, plan, mesh=mesh)
+        self.pg = self.engine.pg
 
     def completed_rounds(self) -> int:
         if self.ckpt is None:
@@ -59,20 +62,7 @@ class WalkRoundRunner:
         return 0 if step is None else step
 
     def run_round(self, r: int) -> np.ndarray:
-        seed = self.cfg.seed * 1000003 + r
-        params = self._walk_params()
-        if self.mesh is None:
-            walks = np.asarray(simulate_walks(
-                self.pg, np.arange(self.g.n), seed=seed, params=params))
-        else:
-            w, drops = distributed_walks(self.pg, self.mesh, seed=seed,
-                                         params=params)
-            if drops and params.mode == "exact":
-                raise RuntimeError(
-                    f"round {r}: {drops} dropped requests in exact mode — "
-                    f"raise capacity or reduce walkers per round (FN-Multi)")
-            walks = np.asarray(w)[:self.g.n]
-        return walks
+        return self.engine.run(seed=round_seed(self.cfg.seed, r)).walks
 
     def rounds(self) -> Iterator[np.ndarray]:
         start = self.completed_rounds()
@@ -99,8 +89,8 @@ def elastic_restart(g: CSRGraph, cfg: Node2VecConfig, ckpt: Checkpointer,
                     new_mesh: Optional[Mesh]) -> WalkRoundRunner:
     """Resume walk rounds on a *different* mesh (node failure / rescale).
 
-    Nothing graph- or walk-related is device-count dependent: the padded
-    graph is rebuilt for the new shard count inside distributed_walks and
-    completed rounds are read back from the checkpoint.
+    Nothing graph- or walk-related is device-count dependent: the sharded
+    layout is rebuilt for the new shard count inside ``WalkEngine.build``
+    and completed rounds are read back from the checkpoint.
     """
     return WalkRoundRunner(g, cfg, mesh=new_mesh, checkpointer=ckpt)

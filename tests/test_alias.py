@@ -2,18 +2,17 @@
 import jax
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import given, settings, strategies as st
+import pytest
 
 from repro.core.alias import alias_sample, build_alias, build_alias_rows
 
 
-@given(st.lists(st.floats(0.01, 100.0), min_size=1, max_size=40),
-       st.integers(0, 3))
-@settings(max_examples=40, deadline=None)
-def test_alias_table_preserves_distribution(weights, seed):
+@pytest.mark.parametrize("k", [1, 2, 3, 5, 8, 13, 21, 40])
+@pytest.mark.parametrize("seed", [0, 1, 2, 3])
+def test_alias_table_preserves_distribution(k, seed):
     """Vose invariant: sum over slots of P(slot drawn) == w_i / sum(w)."""
-    w = np.asarray(weights, np.float64)
-    k = len(w)
+    rng = np.random.default_rng(1000 * k + seed)
+    w = rng.uniform(0.01, 100.0, size=k).astype(np.float64)
     prob, alias = build_alias(w)
     # P(i) = (prob[i] + sum_{j: alias[j]==i} (1-prob[j])) / k
     p = prob.astype(np.float64).copy()

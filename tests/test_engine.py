@@ -1,0 +1,165 @@
+"""Unified WalkEngine API: backend parity, stats, rounds, shims, validation.
+
+The tri-backend parity tests are the PR's core guarantee: one WalkPlan +
+seed -> bit-identical walks on `reference`, `sharded` (fake devices, run in
+a subprocess because jax locks the device count at first init), and `fused`
+(Pallas kernel, interpret mode). This exercises the `walker_key` RNG
+contract: keys are fold_in(fold_in(seed, walker), step) — a pure function of
+(walker, step), never of device layout or backend.
+"""
+import subprocess
+import sys
+import textwrap
+import warnings
+
+import numpy as np
+import pytest
+
+from repro.core import rmat
+from repro.core.graph import PaddedGraph
+from repro.core.walk import WalkParams, simulate_walks
+from repro.engine import WalkEngine, WalkPlan, WalkStats, round_seed
+
+
+@pytest.mark.parametrize("mode", ["exact", "approx", "approx_always"])
+def test_reference_fused_parity(skewed_graph, mode):
+    """The fused (Pallas) backend implements the Sampler's exact draw
+    verbatim — walks must be bit-identical to the reference backend."""
+    kw = dict(p=0.5, q=2.0, length=8, mode=mode, approx_eps=5e-2, cap=24)
+    ref = WalkEngine.build(skewed_graph, WalkPlan(backend="reference", **kw))
+    fus = WalkEngine.build(skewed_graph, WalkPlan(backend="fused", **kw))
+    r = ref.run(seed=11)
+    f = fus.run(seed=11)
+    assert np.array_equal(r.walks, f.walks)
+    assert r.stats.backend == "reference" and f.stats.backend == "fused"
+    assert f.stats.supersteps == 8 and f.stats.dropped == 0
+
+
+PARITY_SCRIPT = textwrap.dedent("""
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=2"
+    import numpy as np, jax
+    from repro.core import rmat
+    from repro.engine import WalkEngine, WalkPlan
+
+    g = rmat.skew(4, k=8, avg_degree=16, seed=3)
+    walks = {{}}
+    for backend in ("reference", "sharded", "fused"):
+        plan = WalkPlan(p=0.5, q=2.0, length=10, mode="{mode}",
+                        approx_eps=5e-2, cap=24, backend=backend)
+        res = WalkEngine.build(g, plan).run(seed=5)
+        assert res.stats.dropped == 0, res.stats
+        walks[backend] = res.walks
+    assert np.array_equal(walks["reference"], walks["sharded"]), "sharded"
+    assert np.array_equal(walks["reference"], walks["fused"]), "fused"
+    print("OK", walks["reference"].shape)
+""")
+
+
+def _run_subprocess(code):
+    r = subprocess.run([sys.executable, "-c", code], capture_output=True,
+                       text=True, timeout=600,
+                       env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin",
+                            "HOME": "/root"})
+    assert r.returncode == 0, r.stderr[-3000:]
+    assert "OK" in r.stdout
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("mode", ["exact", "approx", "approx_always"])
+def test_three_backend_parity(mode):
+    """reference == sharded (2 fake devices) == fused, bit-identical, from
+    one WalkPlan + seed."""
+    _run_subprocess(PARITY_SCRIPT.format(mode=mode))
+
+
+DROPS_SCRIPT = textwrap.dedent("""
+    import os, warnings
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=2"
+    import numpy as np, jax
+    from repro.core import rmat
+    from repro.engine import WalkEngine, WalkPlan
+
+    g = rmat.skew(4, k=8, avg_degree=16, seed=3)
+    plan = WalkPlan(p=0.5, q=2.0, length=8, cap=24, backend="sharded",
+                    capacity=1)             # starve the request exchange
+    eng = WalkEngine.build(g, plan, mesh=None)
+    with warnings.catch_warnings(record=True) as caught:
+        warnings.simplefilter("always")
+        res = eng.run(seed=0)
+    assert res.stats.dropped > 0, res.stats
+    assert any("dropped" in str(w.message) for w in caught), caught
+    strict = WalkEngine.build(g, WalkPlan(p=0.5, q=2.0, length=8, cap=24,
+                                          backend="sharded", capacity=1,
+                                          strict_drops=True))
+    try:
+        strict.run(seed=0)
+        raise SystemExit("strict_drops did not raise")
+    except RuntimeError as e:
+        assert "dropped" in str(e)
+    print("OK", res.stats.dropped)
+""")
+
+
+@pytest.mark.slow
+def test_stats_surface_drops_and_strict_flag():
+    """Starved exchange capacity -> WalkStats.dropped > 0 + warning;
+    strict_drops upgrades the warning to an error."""
+    _run_subprocess(DROPS_SCRIPT)
+
+
+def test_rounds_stream_matches_individual_runs(small_graph):
+    plan = WalkPlan(p=0.5, q=2.0, length=6, cap=16)
+    eng = WalkEngine.build(small_graph, plan)
+    streamed = [r.walks for r in eng.rounds(3, seed=9)]
+    assert len(streamed) == 3
+    for k, w in enumerate(streamed):
+        direct = eng.run(seed=round_seed(9, k))
+        assert np.array_equal(w, direct.walks), k
+    # rounds differ from each other (seeds actually fold in the round)
+    assert not np.array_equal(streamed[0], streamed[1])
+
+
+def test_engine_stats_structure(small_graph):
+    res = WalkEngine.build(small_graph, WalkPlan(length=4)).run(seed=0)
+    assert isinstance(res.stats, WalkStats)
+    assert res.stats.walkers == small_graph.n
+    assert res.stats.collective_bytes == 0   # single-device: nothing on wire
+    assert res.walks.shape == (small_graph.n, 4)
+
+
+def test_deprecated_shim_matches_engine(small_graph):
+    pg = PaddedGraph.build(small_graph, cap=16)
+    params = WalkParams(p=0.5, q=2.0, length=6)
+    with pytest.deprecated_call():
+        shim = np.asarray(simulate_walks(pg, np.arange(small_graph.n), 3,
+                                         params))
+    eng = WalkEngine.build(small_graph,
+                           WalkPlan(p=0.5, q=2.0, length=6, cap=16))
+    assert np.array_equal(shim, eng.run(seed=3).walks)
+
+
+def test_custom_starts_and_walker_ids(small_graph):
+    """walker_ids default to start vertex ids; distinct explicit ids give
+    distinct walks from the same start (the RNG folds in the walker id)."""
+    eng = WalkEngine.build(small_graph, WalkPlan(length=5, cap=16))
+    v = int(np.argmax(small_graph.deg))
+    starts = np.full(8, v, np.int32)
+    same = eng.run(starts=starts, seed=0)
+    assert (same.walks == same.walks[0]).all()   # one walker id -> one walk
+    distinct = eng.run(starts=starts, seed=0,
+                       walker_ids=np.arange(8, dtype=np.int32))
+    assert len({tuple(row) for row in distinct.walks}) > 1
+
+
+def test_plan_validation():
+    with pytest.raises(ValueError, match="backend"):
+        WalkPlan(backend="gpu")
+    with pytest.raises(ValueError, match="length"):
+        WalkPlan(length=0)
+    g = rmat.wec(6, avg_degree=8, seed=0)
+    sharded_engine = WalkEngine.build(g, WalkPlan(length=4,
+                                                  backend="sharded"))
+    with pytest.raises(ValueError, match="analyze"):
+        WalkEngine.build(g, WalkPlan(length=4)).analyze()
+    del sharded_engine

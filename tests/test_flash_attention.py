@@ -2,7 +2,6 @@
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
 
 from repro.kernels.ops import flash_attention_op
 from repro.kernels.ref import flash_attention_ref
@@ -49,9 +48,9 @@ def test_flash_bf16():
                                atol=3e-2, rtol=3e-2)
 
 
-@given(st.integers(1, 2), st.sampled_from([64, 128, 192]),
-       st.sampled_from([1, 2, 4]), st.sampled_from([16, 32]),
-       st.integers(0, 3))
-@settings(max_examples=8, deadline=None)
+@pytest.mark.parametrize("B,S,H,dh,seed", [
+    (1, 64, 1, 16, 0), (2, 64, 4, 32, 1), (1, 128, 2, 16, 2),
+    (2, 128, 1, 32, 3), (1, 192, 4, 16, 0), (2, 192, 2, 32, 1),
+])
 def test_flash_property(B, S, H, dh, seed):
     _check(B, S, H, H, dh, 0, seed=seed)

@@ -13,6 +13,8 @@ from repro.models import model as M
 from repro.models import moe as moe_lib
 from repro.models.config import ModelConfig
 
+pytestmark = pytest.mark.slow   # LM-lowering smoke sweeps dominate runtime
+
 ARCHS = configs.list_archs()
 
 

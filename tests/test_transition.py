@@ -2,7 +2,7 @@
 bound correctness (paper Eq. 2-3)."""
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import given, settings, strategies as st
+import pytest
 
 from repro.core.graph import PAD_ID, CSRGraph, PaddedGraph
 from repro.core.transition import (approx_gap, brute_force_probs, membership,
@@ -17,9 +17,12 @@ def _random_graph(n, m, seed):
     return CSRGraph.from_edges(n, src, dst, w)
 
 
-@given(st.integers(4, 24), st.integers(6, 80), st.integers(0, 10),
-       st.sampled_from([(0.5, 2.0), (2.0, 0.5), (1.0, 1.0), (4.0, 0.25)]))
-@settings(max_examples=40, deadline=None)
+@pytest.mark.parametrize("n,m,seed", [
+    (4, 6, 0), (4, 80, 1), (24, 6, 2), (8, 30, 3), (12, 50, 4), (16, 70, 5),
+    (20, 40, 6), (24, 80, 7), (6, 15, 8), (10, 25, 10),
+])
+@pytest.mark.parametrize("pq", [(0.5, 2.0), (2.0, 0.5), (1.0, 1.0),
+                                (4.0, 0.25)])
 def test_probs_match_oracle(n, m, seed, pq):
     p, q = pq
     g = _random_graph(n, m, seed)
@@ -50,9 +53,11 @@ def test_membership_with_pads():
     assert list(got) == [False, True, True, False, False]
 
 
-@given(st.integers(4, 30), st.integers(20, 150), st.integers(0, 8),
-       st.sampled_from([(0.5, 2.0), (2.0, 0.5), (1.0, 4.0)]))
-@settings(max_examples=30, deadline=None)
+@pytest.mark.parametrize("n,m,seed", [
+    (4, 20, 0), (4, 150, 1), (30, 20, 2), (10, 60, 3), (15, 90, 4),
+    (20, 120, 5), (25, 150, 6), (30, 150, 7), (8, 40, 8), (12, 75, 0),
+])
+@pytest.mark.parametrize("pq", [(0.5, 2.0), (2.0, 0.5), (1.0, 4.0)])
 def test_approx_bounds_contain_true_probs(n, m, seed, pq):
     """Paper Eq. 2-3 (generalized): every actual transition prob for a
     non-u candidate lies within [LB-ish, UB-ish]; we verify the *gap*
