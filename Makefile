@@ -1,10 +1,25 @@
-.PHONY: ci fast bench
+.PHONY: ci fast smoke lint bench bench-smoke bench-baseline
 
-ci:            ## tier-1: full test suite (the per-PR bar)
+ci:            ## tier-1: full test suite (the per-PR bar; nightly in CI)
 	scripts/ci.sh tier1
 
 fast:          ## tier-1 minus `slow` (distributed / subprocess) tests
 	scripts/ci.sh fast
 
+smoke:         ## per-push gate: lint + import + collect + fast unit subset
+	scripts/ci.sh smoke
+
+lint:          ## forbidden-API checks only (jax-0.4.37 quirks)
+	scripts/ci.sh lint
+
 bench:         ## run the benchmark battery (CSV rows to stdout)
 	PYTHONPATH=src python -m benchmarks.run
+
+bench-smoke:   ## emit BENCH_smoke.json + compare ratios vs baseline (warn >2x)
+	PYTHONPATH=src python -m benchmarks.bench_smoke BENCH_smoke.json
+	python scripts/bench_compare.py BENCH_smoke.json \
+	    benchmarks/baselines/BENCH_smoke.json
+
+bench-baseline: ## refresh the committed bench-smoke baseline
+	PYTHONPATH=src python -m benchmarks.bench_smoke \
+	    benchmarks/baselines/BENCH_smoke.json

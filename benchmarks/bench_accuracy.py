@@ -8,8 +8,7 @@ from __future__ import annotations
 
 import numpy as np
 
-from benchmarks.common import row, time_fn
-from repro.core import rmat
+from benchmarks.common import dataset, row, time_fn
 from repro.core.node2vec import Node2VecConfig, generate_walks, \
     train_embeddings
 
@@ -38,8 +37,8 @@ def _f1(emb, labels, seed=0):
 
 def run():
     # SBM with weighted edges so trim-by-weight actually bites
-    g, labels = rmat.sbm_labeled(n=400, num_communities=4, p_in=0.06,
-                                 p_out=0.004, seed=1)
+    ds = dataset("sbm:n=400,c=4,pin=0.06,pout=0.004,seed=1")
+    g, labels = ds.graph, ds.labels
     rng = np.random.default_rng(0)
     g.wgt = (rng.random(g.m) * 4 + 0.5).astype(np.float32)
 

@@ -9,13 +9,13 @@ import time
 import numpy as np
 
 from benchmarks.common import row
-from repro.core import rmat
+from benchmarks import common
 from repro.core.node2vec import Node2VecConfig, train_embeddings
 from repro.engine import WalkEngine
 
 
 def run():
-    g = rmat.wec(10, avg_degree=20, seed=0)
+    g = common.graph("wec:k=10,deg=20,seed=0")
     cfg = Node2VecConfig(p=1.0, q=2.0, walk_length=40, num_walks=2, dim=32,
                          window=5, epochs=1, batch_size=4096)
     eng = WalkEngine.build(g, cfg.plan())

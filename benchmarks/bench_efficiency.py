@@ -11,7 +11,7 @@ import time
 import numpy as np
 
 from benchmarks.common import row, time_fn
-from repro.core import rmat
+from benchmarks import common
 from repro.core.graph import PaddedGraph
 from repro.core.transition import unnormalized_probs
 from repro.engine import WalkEngine, WalkPlan
@@ -46,7 +46,7 @@ def _spark_emulation_precompute(g, p, q):
 def run():
     p, q = 0.5, 2.0
     for k, avg in [(9, 20), (10, 30)]:
-        g = rmat.wec(k, avg_degree=avg, seed=0)
+        g = common.graph(f"wec:k={k},deg={avg},seed=0")
         length = 40
 
         # spark emulation: trim + full pair precompute + walk

@@ -8,12 +8,12 @@ from __future__ import annotations
 import numpy as np
 
 from benchmarks.common import row
-from repro.core import rmat
+from benchmarks import common
 from repro.engine import WalkEngine, WalkPlan
 
 
 def run():
-    g = rmat.skew(4, k=11, avg_degree=40, seed=0)
+    g = common.graph("skew:s=4,k=11,deg=40,seed=0")
     cap = 48
     eng = WalkEngine.build(g, WalkPlan(p=0.5, q=2.0, length=30))
     walks = eng.run(seed=0).walks

@@ -6,7 +6,7 @@ from __future__ import annotations
 import numpy as np
 
 from benchmarks.common import row
-from repro.core import rmat
+from benchmarks import common
 from repro.core.graph import PaddedGraph
 
 
@@ -19,8 +19,8 @@ def _fast_node2vec_bytes(pg: PaddedGraph) -> int:
 
 
 def run():
-    for name, g in [("wec12", rmat.wec(12, avg_degree=30, seed=0)),
-                    ("skew4", rmat.skew(4, k=11, avg_degree=40, seed=0))]:
+    for name, g in [("wec12", common.graph("wec:k=12,deg=30,seed=0")),
+                    ("skew4", common.graph("skew:s=4,k=11,deg=40,seed=0"))]:
         eq1 = g.transition_table_bytes()
         pg = PaddedGraph.build(g, cap=32)
         ours = _fast_node2vec_bytes(pg)

@@ -4,14 +4,14 @@ time per vertex (flat => linear scaling, the paper's finding)."""
 from __future__ import annotations
 
 from benchmarks.common import row, time_fn
-from repro.core import rmat
+from benchmarks import common
 from repro.engine import WalkEngine, WalkPlan
 
 
 def run():
     per_vertex = []
     for k in (10, 11, 12, 13):
-        g = rmat.er(k, avg_degree=10, seed=0)
+        g = common.graph(f"er:k={k},deg=10,seed=0")
         eng = WalkEngine.build(g, WalkPlan(p=0.5, q=2.0, length=40))
         us = time_fn(lambda: eng.run(seed=0).walks)
         per_vertex.append(us / g.n)

@@ -8,14 +8,14 @@ from __future__ import annotations
 import numpy as np
 
 from benchmarks.common import row, time_fn
-from repro.core import rmat
+from benchmarks import common
 from repro.engine import WalkEngine, WalkPlan
 
 
 def run():
     cap = 32
     for s in (1, 2, 3, 4, 5):
-        g = rmat.skew(s, k=10, avg_degree=30, seed=0)
+        g = common.graph(f"skew:s={s},k=10,deg=30,seed=0")
         base = dict(p=0.5, q=2.0, length=30)
         eng_base = WalkEngine.build(g, WalkPlan(**base))
         eng_cache = WalkEngine.build(g, WalkPlan(cap=cap, **base))

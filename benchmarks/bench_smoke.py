@@ -1,0 +1,113 @@
+"""Smoke benchmark — minutes, machine-readable, regression-comparable.
+
+Emits ``BENCH_smoke.json`` with **ratio** metrics only: wall-clock on this
+container varies 2-5x with machine load (EXPERIMENTS.md §Methodology), so
+the nightly gate compares ratios of interleaved runs (load cancels) and
+deterministic layout/allocation quantities (exact), never absolute time.
+Raw microseconds are recorded under ``info`` for humans but are not
+compared by ``scripts/bench_compare.py``.
+
+    make bench-smoke            # emit + compare against committed baseline
+    PYTHONPATH=src python -m benchmarks.bench_smoke [out.json]
+"""
+from __future__ import annotations
+
+import json
+import sys
+import tracemalloc
+
+import numpy as np
+
+from benchmarks.common import graph, time_fn
+from repro.core.graph import CSRGraph
+from repro.data.ingest import csr_from_chunks
+from repro.engine import WalkEngine, WalkPlan
+from repro.roofline.traffic import walk_collective_bytes
+
+SKEW_SPEC = "skew:s=4,k=9,deg=20,seed=3"
+CAP = 24
+
+
+def _peak(fn):
+    tracemalloc.start()
+    try:
+        tracemalloc.reset_peak()
+        out = fn()
+        _, peak = tracemalloc.get_traced_memory()
+    finally:
+        tracemalloc.stop()
+    return peak, out
+
+
+def _ingest_metrics(info):
+    n, m, chunk = 20_000, 400_000, 16_384
+    rng = np.random.default_rng(0)
+    src = rng.integers(0, n, m)
+    dst = rng.integers(0, n, m)
+    w = np.ones(m, np.float32)
+
+    def chunks():
+        for i in range(0, m, chunk):
+            yield src[i:i + chunk], dst[i:i + chunk], w[i:i + chunk]
+
+    peak_chunked, g = _peak(
+        lambda: csr_from_chunks(chunks, n=n, block_edges=chunk))
+    peak_dense, _ = _peak(lambda: CSRGraph.from_edges(n, src, dst, w))
+    out_bytes = g.row_ptr.nbytes + g.col.nbytes + g.wgt.nbytes
+    info["ingest_peak_chunked_bytes"] = peak_chunked
+    info["ingest_peak_dense_bytes"] = peak_dense
+    return {
+        # allocation sizes are deterministic, so these ratios are exact
+        "ingest_peak_over_output": peak_chunked / out_bytes,
+        "ingest_chunked_over_dense_peak": peak_chunked / peak_dense,
+    }
+
+
+def _layout_metrics(g):
+    base = walk_collective_bytes(8, 512, g.max_degree, 20)
+    cache = walk_collective_bytes(8, 512, CAP, 20)
+    csr_bytes = g.row_ptr.nbytes + g.col.nbytes + g.wgt.nbytes
+    return {
+        "coll_bytes_cache_over_base": cache / base,
+        "transition_table_over_csr_bytes":
+            g.transition_table_bytes() / csr_bytes,
+    }
+
+
+def _walk_metrics(g, info):
+    kw = dict(p=0.5, q=2.0, length=10, cap=CAP)
+    engines = {
+        "exact": WalkEngine.build(g, WalkPlan(mode="exact", **kw)),
+        "approx": WalkEngine.build(
+            g, WalkPlan(mode="approx_always", approx_eps=5e-2, **kw)),
+        "fused": WalkEngine.build(g, WalkPlan(backend="fused", **kw)),
+    }
+    us = {name: time_fn(lambda e=e: e.run(seed=0).walks, warmup=1, iters=3)
+          for name, e in engines.items()}
+    info.update({f"walk_us_{k}": v for k, v in us.items()})
+    return {
+        "walk_us_approx_over_exact": us["approx"] / us["exact"],
+        "walk_us_fused_over_reference": us["fused"] / us["exact"],
+    }
+
+
+def run(out_path: str = "BENCH_smoke.json") -> dict:
+    info: dict = {}
+    g = graph(SKEW_SPEC)
+    info["graph"] = {"spec": SKEW_SPEC, "n": g.n, "m": g.m,
+                     "max_degree": g.max_degree}
+    metrics = {}
+    metrics.update(_ingest_metrics(info))
+    metrics.update(_layout_metrics(g))
+    metrics.update(_walk_metrics(g, info))
+    doc = {"version": 1, "metrics": metrics, "info": info}
+    with open(out_path, "w") as f:
+        json.dump(doc, f, indent=2, sort_keys=True)
+    for k in sorted(metrics):
+        print(f"{k} = {metrics[k]:.4g}")
+    print(f"wrote {out_path}")
+    return doc
+
+
+if __name__ == "__main__":
+    run(sys.argv[1] if len(sys.argv) > 1 else "BENCH_smoke.json")

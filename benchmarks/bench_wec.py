@@ -4,14 +4,14 @@ All engines run through the unified WalkEngine API."""
 from __future__ import annotations
 
 from benchmarks.common import row, time_fn
-from repro.core import rmat
+from benchmarks import common
 from repro.engine import WalkEngine, WalkPlan
 
 
 def run():
     cap = 32
     for k in (9, 10, 11):
-        g = rmat.wec(k, avg_degree=40, seed=0)
+        g = common.graph(f"wec:k={k},deg=40,seed=0")
         base = dict(p=2.0, q=0.5, length=30)
         engines = {
             "fn_base": WalkEngine.build(g, WalkPlan(**base)),

@@ -31,3 +31,19 @@ def row(name: str, us: float, derived: str = "") -> str:
     line = f"{name},{us:.1f},{derived}"
     print(line, flush=True)
     return line
+
+
+def graph(spec: str, cache_dir: str = None):
+    """Resolve a dataset spec (``repro.data.ingest``). Set the
+    ``BENCH_GRAPH_CACHE`` env var to memmap-cache on-disk edge lists
+    across bench runs (EXPERIMENTS.md §Datasets)."""
+    import os
+
+    from repro.data.ingest import load_graph
+    cache = cache_dir or os.environ.get("BENCH_GRAPH_CACHE")
+    return load_graph(spec, cache_dir=cache)
+
+
+def dataset(spec: str):
+    from repro.data.ingest import load_dataset
+    return load_dataset(spec)

@@ -9,12 +9,12 @@ exact ≈ approx >> spark-trim.
 """
 import numpy as np
 
-from repro.core import rmat
 from repro.core.node2vec import (Node2VecConfig, generate_walks,
                                  train_embeddings)
+from repro.data.ingest import load_dataset
 
-graph, labels = rmat.sbm_labeled(n=400, num_communities=4, p_in=0.06,
-                                 p_out=0.004, seed=1)
+ds = load_dataset("sbm:n=400,c=4,pin=0.06,pout=0.004,seed=1")
+graph, labels = ds.graph, ds.labels
 rng = np.random.default_rng(0)
 graph.wgt = (rng.random(graph.m) * 4 + 0.5).astype(np.float32)
 print(f"graph: {graph.n} vertices, {graph.m} edges, 4 communities")

@@ -16,13 +16,15 @@ import jax  # noqa: E402
 from jax.sharding import Mesh  # noqa: E402
 
 from repro.checkpoint.checkpointer import Checkpointer  # noqa: E402
-from repro.core import rmat  # noqa: E402
 from repro.core.node2vec import Node2VecConfig  # noqa: E402
+from repro.data.ingest import load_graph  # noqa: E402
 from repro.engine import WalkEngine  # noqa: E402
 from repro.runtime.balance import shard_balance  # noqa: E402
 from repro.runtime.fault_tolerance import WalkRoundRunner  # noqa: E402
 
-graph = rmat.skew(3, k=10, avg_degree=25, seed=0)
+# degree-descending relabel: hubs become the contiguous id prefix, so the
+# range partition below spreads FN-Cache hot rows evenly across shards
+graph = load_graph("skew:s=3,k=10,deg=25,seed=0,relabel=degree")
 print(f"graph: {graph.n} vertices, {graph.m} edges, "
       f"max degree {graph.max_degree}")
 rep = shard_balance(graph, num_shards=8, cap=32)

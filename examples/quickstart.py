@@ -1,21 +1,23 @@
 """Quickstart: Fast-Node2Vec end to end in ~30 lines, through the unified
 WalkEngine API.
 
-Builds a small social-like RMAT graph, declares a WalkPlan (FN-Cache layout,
-exact 2nd-order sampling), streams FN-Multi walk rounds from the engine,
-trains SGNS embeddings, and prints nearest neighbors of the highest-degree
-vertex in embedding space. Swap ``backend="reference"`` for ``"fused"``
-(Pallas step kernel) or ``"sharded"`` (multi-device) — same walks, same seed.
+Loads a small social-like graph from the dataset registry (swap the spec
+for ``"edgelist:/path/to/edges.txt"`` to walk a real on-disk graph),
+declares a WalkPlan (FN-Cache layout, exact 2nd-order sampling), streams
+FN-Multi walk rounds from the engine, trains SGNS embeddings, and prints
+nearest neighbors of the highest-degree vertex in embedding space. Swap
+``backend="reference"`` for ``"fused"`` (Pallas step kernel) or
+``"sharded"`` (multi-device) — same walks, same seed.
 
     PYTHONPATH=src python examples/quickstart.py
 """
 import numpy as np
 
-from repro.core import rmat
 from repro.core.node2vec import Node2VecConfig, train_embeddings
+from repro.data.ingest import load_graph
 from repro.engine import WalkEngine, WalkPlan
 
-graph = rmat.wec(10, avg_degree=30, seed=0)          # 1024 vertices
+graph = load_graph("wec:k=10,deg=30,seed=0")         # 1024 vertices
 print(f"graph: {graph.n} vertices, {graph.m} edges, "
       f"max degree {graph.max_degree}")
 

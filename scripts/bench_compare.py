@@ -1,0 +1,72 @@
+#!/usr/bin/env python
+"""Compare a BENCH_smoke.json against the committed baseline.
+
+Only the ``metrics`` block is compared — these are ratio / deterministic
+quantities by construction (benchmarks/bench_smoke.py); absolute wall-clock
+lives in ``info`` and is ignored because it varies 2-5x with machine load.
+
+A metric "regresses" when it drifts by more than ``--threshold`` (default
+2.0) in either direction: drift = max(new/old, old/new). Default behavior
+is warn-and-exit-0 (the nightly job stays green but prints WARN lines);
+``--strict`` turns warnings into a non-zero exit for gating.
+
+    python scripts/bench_compare.py BENCH_smoke.json \
+        benchmarks/baselines/BENCH_smoke.json [--threshold 2.0] [--strict]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+
+def compare(new: dict, base: dict, threshold: float) -> list[str]:
+    warnings = []
+    new_m = new.get("metrics", {})
+    base_m = base.get("metrics", {})
+    for key in sorted(base_m):
+        old = base_m[key]
+        if key not in new_m:
+            warnings.append(f"WARN {key}: missing from new run")
+            continue
+        cur = new_m[key]
+        if old == 0 or cur == 0:
+            drift = float("inf") if cur != old else 1.0
+        else:
+            r = cur / old
+            drift = max(r, 1.0 / r)
+        line = f"{key}: baseline={old:.4g} new={cur:.4g} drift={drift:.2f}x"
+        if drift > threshold:
+            warnings.append(f"WARN {line} (> {threshold}x)")
+            print(f"WARN {line}  <-- regression", flush=True)
+        else:
+            print(f"  ok {line}", flush=True)
+    for key in sorted(set(new_m) - set(base_m)):
+        print(f" new {key}: {new_m[key]:.4g} (no baseline yet)", flush=True)
+    return warnings
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("new", help="freshly emitted BENCH_smoke.json")
+    ap.add_argument("baseline", help="committed baseline json")
+    ap.add_argument("--threshold", type=float, default=2.0,
+                    help="max allowed drift ratio in either direction")
+    ap.add_argument("--strict", action="store_true",
+                    help="exit 1 on any regression (default: warn only)")
+    args = ap.parse_args()
+    with open(args.new) as f:
+        new = json.load(f)
+    with open(args.baseline) as f:
+        base = json.load(f)
+    warnings = compare(new, base, args.threshold)
+    if warnings:
+        print(f"{len(warnings)} metric(s) drifted > {args.threshold}x",
+              file=sys.stderr)
+        return 1 if args.strict else 0
+    print("all metrics within threshold")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -120,6 +120,103 @@ class ShardedGraph:
                 self.hot_alias_i, self.hot_deg, self.hot_wmin, self.hot_wmax)
 
     @staticmethod
+    def from_csr(g, num_shards: int, cap: Optional[int] = None,
+                 hot_cap: Optional[int] = None) -> "ShardedGraph":
+        """Shard-by-shard build straight from a host :class:`CSRGraph`.
+
+        Packs each shard's padded rows (and alias tables) directly from CSR
+        slices into the preallocated output arrays — no dense whole-graph
+        :class:`PaddedGraph` intermediate (that path materializes a second
+        full [n, cap] copy plus per-vertex scalars the sharded engine never
+        reads). Bit-identical to
+        ``ShardedGraph.build(PaddedGraph.build(g, cap, hot_cap), n)``
+        (asserted in tests), including the no-hot sentinel row.
+        """
+        from repro.core.alias import build_alias_rows
+
+        deg = g.deg                                   # [n] i32
+        max_deg = g.max_degree
+        if cap is None or cap >= max(max_deg, 1):
+            cap = max(max_deg, 1)
+        cap = max(int(cap), 1)
+        hot_vertices = np.nonzero(deg > cap)[0].astype(np.int32)
+        if hot_cap is None:
+            hot_cap = int(deg[hot_vertices].max()) if len(hot_vertices) \
+                else cap
+        hot_cap = max(int(hot_cap), cap)
+        n = g.n
+        n_pad = ((n + num_shards - 1) // num_shards) * num_shards
+        n_local = n_pad // num_shards
+
+        def pack_block(vertices, out_adj, out_wgt):
+            width = out_adj.shape[1]
+            for i, v in enumerate(vertices):
+                lo, hi = g.row_ptr[v], g.row_ptr[v + 1]
+                d = min(int(hi - lo), width)
+                out_adj[i, :d] = g.col[lo:lo + d]
+                out_wgt[i, :d] = g.wgt[lo:lo + d]
+
+        adj = np.full((n_pad, cap), PAD_ID, np.int32)
+        wgt = np.zeros((n_pad, cap), np.float32)
+        alias_p = np.zeros((n_pad, cap), np.float32)
+        alias_i = np.zeros((n_pad, cap), np.int32)
+        alias_p[n:] = 1.0                   # padding rows: build()'s pad fill
+        deg_pad = np.zeros(n_pad, np.int32)
+        deg_pad[:n] = deg
+        for s in range(num_shards):
+            lo_v, hi_v = s * n_local, min((s + 1) * n_local, n)
+            if hi_v <= lo_v:
+                break
+            pack_block(range(lo_v, hi_v), adj[lo_v:hi_v], wgt[lo_v:hi_v])
+            ap, ai = build_alias_rows(wgt[lo_v:hi_v])
+            alias_p[lo_v:hi_v] = ap
+            alias_i[lo_v:hi_v] = ai
+
+        def row_min_max(v, width):
+            lo = g.row_ptr[v]
+            d = min(int(g.row_ptr[v + 1] - lo), width)
+            if d == 0:
+                return 1.0, 1.0
+            w = g.wgt[lo:lo + d]
+            return float(w.min()), float(w.max())
+
+        if len(hot_vertices):
+            k = len(hot_vertices)
+            hot_ids = hot_vertices
+            hot_adj = np.full((k, hot_cap), PAD_ID, np.int32)
+            hot_wgt = np.zeros((k, hot_cap), np.float32)
+            pack_block(hot_vertices, hot_adj, hot_wgt)
+            hot_deg = deg[hot_vertices]
+            mm = np.array([row_min_max(int(v), hot_cap)
+                           for v in hot_vertices], np.float32)
+            hot_wmin, hot_wmax = mm[:, 0], mm[:, 1]
+        else:
+            # sentinel row; the scalar lanes mirror build()'s clamped
+            # pg.deg[PAD_ID] / w_min[PAD_ID] gathers (last real vertex)
+            hot_ids = np.full(1, PAD_ID, np.int32)
+            hot_adj = np.full((1, hot_cap), PAD_ID, np.int32)
+            hot_wgt = np.zeros((1, hot_cap), np.float32)
+            hot_deg = deg[n - 1:n]
+            wmin, wmax = row_min_max(n - 1, cap)
+            hot_wmin = np.full(1, wmin, np.float32)
+            hot_wmax = np.full(1, wmax, np.float32)
+        hot_alias_p, hot_alias_i = build_alias_rows(hot_wgt)
+
+        return ShardedGraph(
+            n=n_pad, n_orig=n, num_shards=num_shards, cap=cap,
+            hot_cap=hot_cap,
+            adj=jnp.asarray(adj), wgt=jnp.asarray(wgt),
+            alias_p=jnp.asarray(alias_p), alias_i=jnp.asarray(alias_i),
+            deg=jnp.asarray(deg_pad),
+            hot_ids=jnp.asarray(hot_ids), hot_adj=jnp.asarray(hot_adj),
+            hot_wgt=jnp.asarray(hot_wgt),
+            hot_alias_p=jnp.asarray(hot_alias_p),
+            hot_alias_i=jnp.asarray(hot_alias_i),
+            hot_deg=jnp.asarray(hot_deg),
+            hot_wmin=jnp.asarray(hot_wmin),
+            hot_wmax=jnp.asarray(hot_wmax))
+
+    @staticmethod
     def build(pg: PaddedGraph, num_shards: int) -> "ShardedGraph":
         n_pad = ((pg.n + num_shards - 1) // num_shards) * num_shards
 

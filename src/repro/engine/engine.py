@@ -61,7 +61,17 @@ class WalkEngine:
     def build(cls, graph, plan: WalkPlan,
               mesh: Optional[Mesh] = None) -> "WalkEngine":
         """Bind ``plan`` to ``graph``. ``mesh`` is only consulted by the
-        sharded backend (default: a 1-D 'rw' mesh over all devices)."""
+        sharded backend (default: a 1-D 'rw' mesh over all devices).
+
+        ``graph`` may be a host :class:`CSRGraph`, a prebuilt
+        :class:`PaddedGraph`/:class:`ShardedGraph`, or a dataset spec
+        string (``"wec:k=10,deg=30"``, ``"edgelist:/path.txt"``, ... —
+        resolved by ``repro.data.ingest.load_graph``). CSR input on the
+        sharded backend takes the shard-by-shard ``ShardedGraph.from_csr``
+        path: no dense whole-graph ``PaddedGraph`` intermediate."""
+        if isinstance(graph, str):
+            from repro.data.ingest import load_graph
+            graph = load_graph(graph)
         if isinstance(graph, ShardedGraph) and plan.backend != "sharded":
             raise ValueError(
                 f"ShardedGraph input requires backend='sharded', "
@@ -80,10 +90,13 @@ class WalkEngine:
                 raise ValueError(
                     f"ShardedGraph built for {sg.num_shards} shards but the "
                     f"mesh has {num_shards} devices")
-        else:
-            pg = graph if isinstance(graph, PaddedGraph) else \
-                PaddedGraph.build(graph, cap=plan.cap, hot_cap=plan.hot_cap)
+        elif isinstance(graph, PaddedGraph):
+            pg = graph
             sg = ShardedGraph.build(pg, num_shards)
+        else:
+            # CSRGraph: pack shard by shard, skipping the dense PaddedGraph
+            sg = ShardedGraph.from_csr(graph, num_shards, cap=plan.cap,
+                                       hot_cap=plan.hot_cap)
         # capacity default = one full walker block per destination: zero
         # drops, any skew. FN-Multi rounds are the lever for lowering it.
         capacity = plan.capacity if plan.capacity is not None else sg.n_local

@@ -33,11 +33,11 @@ import numpy as np
 
 from repro import configs
 from repro.checkpoint.checkpointer import Checkpointer
-from repro.core import rmat
 from repro.core.node2vec import Node2VecConfig, train_embeddings
 from repro.core.skipgram import SGNSConfig, init_params as sgns_init, \
     train_step as sgns_step
 from repro.data.corpus import walks_to_lm_tokens, walks_to_sgns_batches
+from repro.data.ingest import load_graph
 from repro.engine import WalkEngine, WalkPlan
 from repro.launch.mesh import make_rw_mesh
 from repro.models import model as M
@@ -46,9 +46,16 @@ from repro.optim.grad_utils import clip_by_global_norm
 from repro.runtime.fault_tolerance import WalkRoundRunner
 
 
+def graph_spec(args) -> str:
+    """``--graph`` wins; otherwise the legacy --k/--avg-degree WeC knobs."""
+    return args.graph or f"wec:k={args.k},deg={args.avg_degree:g}," \
+                         f"seed={args.seed}"
+
+
 def run_node2vec(args):
-    g = rmat.wec(args.k, avg_degree=args.avg_degree, seed=args.seed)
-    print(f"graph: n={g.n} m={g.m} maxdeg={g.max_degree}")
+    g = load_graph(graph_spec(args), cache_dir=args.graph_cache)
+    print(f"graph: {graph_spec(args)} -> n={g.n} m={g.m} "
+          f"maxdeg={g.max_degree}")
     mesh = make_rw_mesh() if jax.device_count() > 1 else None
     n2v = Node2VecConfig(p=args.p, q=args.q, walk_length=args.walk_length,
                          num_walks=args.rounds, dim=args.dim,
@@ -95,7 +102,8 @@ def run_lm(args):
         print(f"resumed from step {start_step}")
 
     # corpus: walks over a small graph -> token sequences
-    g = rmat.wec(max(args.k, 8), avg_degree=10, seed=args.seed)
+    g = load_graph(args.graph, cache_dir=args.graph_cache) if args.graph \
+        else load_graph(f"wec:k={max(args.k, 8)},deg=10,seed={args.seed}")
     walks = WalkEngine.build(
         g, WalkPlan(p=1.0, q=1.0, length=64)).run(seed=args.seed).walks
     seq = args.seq
@@ -142,6 +150,13 @@ def main():
     ap.add_argument("--arch", default="yi-6b")
     ap.add_argument("--smoke", action="store_true",
                     help="reduced config (CPU-sized)")
+    ap.add_argument("--graph", default=None,
+                    help="dataset spec (repro.data.ingest.load_graph): "
+                         "'wec:k=12,deg=30', 'edgelist:/path/edges.txt', "
+                         "'csr:/path/cache_dir', ... (overrides --k)")
+    ap.add_argument("--graph-cache", default=None,
+                    help="CSR cache dir for edgelist specs (build once, "
+                         "memmap thereafter)")
     ap.add_argument("--k", type=int, default=10, help="RMAT log2 vertices")
     ap.add_argument("--avg-degree", type=float, default=20)
     ap.add_argument("--p", type=float, default=1.0)

@@ -53,7 +53,6 @@ class WalkRoundRunner:
         if cfg.mode == "exact":
             plan = dataclasses.replace(plan, strict_drops=True)
         self.engine = WalkEngine.build(g, plan, mesh=mesh)
-        self.pg = self.engine.pg
 
     def completed_rounds(self) -> int:
         if self.ckpt is None:

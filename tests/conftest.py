@@ -1,16 +1,20 @@
 """Shared fixtures. NOTE: no XLA_FLAGS here — tests see 1 CPU device; the
-distributed tests spawn subprocesses that set the device count themselves."""
+distributed tests spawn subprocesses that set the device count themselves.
+
+Fixtures resolve through the dataset registry so every test run exercises
+the ``load_graph`` spec path (bit-identical to calling ``repro.core.rmat``
+directly — asserted in tests/test_ingest.py)."""
 import numpy as np
 import pytest
 
-from repro.core import rmat
+from repro.data.ingest import load_graph
 
 
 @pytest.fixture(scope="session")
 def small_graph():
-    return rmat.wec(8, avg_degree=12, seed=1)          # 256 vertices
+    return load_graph("wec:k=8,deg=12,seed=1")          # 256 vertices
 
 
 @pytest.fixture(scope="session")
 def skewed_graph():
-    return rmat.skew(4, k=9, avg_degree=20, seed=3)    # 512 vertices, skewed
+    return load_graph("skew:s=4,k=9,deg=20,seed=3")     # 512 vertices, skewed

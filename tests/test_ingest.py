@@ -1,0 +1,345 @@
+"""Streaming ingestion + dataset registry (repro.data.ingest).
+
+Covers the PR's acceptance criteria:
+* chunked two-pass builder == CSRGraph.from_edges, bit-for-bit;
+* builder peak transient allocation bounded by O(n + chunk), asserted with
+  tracemalloc against a budget provably smaller than any O(m) temporary;
+* disk cache loads are np.memmap-backed and roundtrip exactly;
+* edges -> CSR -> disk cache -> load_graph reload -> **bit-identical
+  walks** from one WalkPlan + seed on all three backends, including the
+  degree-relabeled layout;
+* ShardedGraph.from_csr (shard-by-shard pack) == the dense
+  PaddedGraph -> ShardedGraph.build path, field by field.
+"""
+import os
+import tracemalloc
+
+import numpy as np
+import pytest
+
+from repro.core import rmat
+from repro.core.graph import CSRGraph, PaddedGraph
+from repro.core.walk_distributed import ShardedGraph
+from repro.data import ingest
+from repro.data.ingest import (csr_from_chunks, edgelist_to_csr, load_csr,
+                               load_dataset, load_graph, parse_spec,
+                               relabel_by_degree, save_csr, write_edgelist)
+from repro.engine import WalkEngine, WalkPlan
+
+
+def _pair_weights(src, dst):
+    """Deterministic weight per undirected pair, so dedup order can't
+    change which weight survives."""
+    lo, hi = np.minimum(src, dst), np.maximum(src, dst)
+    return ((lo * 31 + hi) % 97 + 1).astype(np.float32)
+
+
+def _random_edges(n, m, seed):
+    rng = np.random.default_rng(seed)
+    src = rng.integers(0, n, m)
+    dst = rng.integers(0, n, m)
+    return src, dst, _pair_weights(src, dst)
+
+
+def _chunks_of(src, dst, wgt, chunk):
+    def chunks():
+        for i in range(0, len(src), chunk):
+            yield (src[i:i + chunk].astype(np.int64),
+                   dst[i:i + chunk].astype(np.int64), wgt[i:i + chunk])
+    return chunks
+
+
+def _csr_equal(a: CSRGraph, b: CSRGraph) -> bool:
+    return (a.n == b.n
+            and np.array_equal(np.asarray(a.row_ptr), np.asarray(b.row_ptr))
+            and np.array_equal(np.asarray(a.col), np.asarray(b.col))
+            and np.array_equal(np.asarray(a.wgt), np.asarray(b.wgt)))
+
+
+# ------------------------------------------------------------------ builder
+
+@pytest.mark.parametrize("n,m,chunk,seed", [
+    (2, 1, 4, 0), (16, 40, 7, 1), (100, 1000, 64, 2), (300, 4000, 513, 3),
+    (50, 5000, 4096, 4),   # chunk > m: single-chunk path
+])
+def test_chunk_builder_matches_from_edges(n, m, chunk, seed):
+    src, dst, wgt = _random_edges(n, m, seed)
+    ref = CSRGraph.from_edges(n, src, dst, wgt)
+    g = csr_from_chunks(_chunks_of(src, dst, wgt, chunk), n=n,
+                        block_edges=chunk)
+    assert _csr_equal(g, ref)
+
+
+def test_chunk_builder_discovers_n():
+    src = np.array([0, 5, 2]); dst = np.array([5, 2, 7])
+    g = csr_from_chunks(_chunks_of(src, dst, np.ones(3, np.float32), 2))
+    assert g.n == 8
+    assert g.m == 6   # symmetrized
+
+
+def test_chunk_builder_directed_no_dedup():
+    src = np.array([0, 0, 1]); dst = np.array([1, 1, 2])
+    w = np.array([2.0, 3.0, 4.0], np.float32)
+    g = csr_from_chunks(_chunks_of(src, dst, w, 2), n=3, undirected=False,
+                        dedup=False)
+    assert g.m == 3 and list(g.neighbors(0)) == [1, 1]
+    gd = csr_from_chunks(_chunks_of(src, dst, w, 2), n=3, undirected=False,
+                         dedup=True)
+    assert gd.m == 2
+    assert gd.weights(0)[0] == 2.0   # first-arriving weight wins
+
+
+def test_chunk_builder_rejects_out_of_range_ids():
+    src = np.array([0, 9]); dst = np.array([1, 2])
+    with pytest.raises(ValueError, match=">= n"):
+        csr_from_chunks(_chunks_of(src, dst, np.ones(2, np.float32), 8), n=4)
+
+
+def test_chunk_builder_peak_memory_bounded():
+    """Acceptance criterion: peak transient allocation is bounded by the
+    chunk size (plus the CSR output + O(n) counters) — asserted against a
+    budget provably below the cheapest possible O(m) temporary, so any
+    whole-edge-list materialization fails this test."""
+    n, m, chunk = 50_000, 1_000_000, 16_384
+    rng = np.random.default_rng(7)
+    src = rng.integers(0, n, m)
+    dst = rng.integers(0, n, m)
+    wgt = np.ones(m, np.float32)
+    chunks = _chunks_of(src, dst, wgt, chunk)
+
+    tracemalloc.start()
+    try:
+        tracemalloc.reset_peak()
+        g = csr_from_chunks(chunks, n=n, block_edges=chunk)
+        _, peak = tracemalloc.get_traced_memory()
+    finally:
+        tracemalloc.stop()
+
+    m_placed = 2 * int((src != dst).sum())        # symmetrized placements
+    out_bytes = (n + 1) * 8 + m_placed * (4 + 4)  # indptr + col + wgt
+    overhead_budget = 24 * 8 * chunk + 32 * n + (1 << 20)
+    # the budget must itself rule out even a single O(m) int32 temporary
+    assert overhead_budget < m_placed * 4
+    assert peak - out_bytes < overhead_budget, (
+        f"peak {peak / 2**20:.1f} MiB exceeds CSR output "
+        f"{out_bytes / 2**20:.1f} MiB + O(n + chunk) budget "
+        f"{overhead_budget / 2**20:.1f} MiB")
+    assert g.m <= m_placed
+
+
+# ------------------------------------------------------- text parsing + IO
+
+def test_edgelist_text_parsing(tmp_path):
+    p = tmp_path / "g.txt"
+    p.write_text("# comment\n% other comment\n"
+                 "0 1 2.5\n1,2,3.5\n\n2 0\n")
+    g = edgelist_to_csr(str(p), n=3)
+    assert g.m == 6
+    assert g.weights(0)[0] == 2.5          # 0-1 weighted
+    assert g.weights(0)[1] == 1.0          # 2-0 default weight
+    assert np.array_equal(g.neighbors(1), [0, 2])
+
+
+def test_edgelist_roundtrip_matches_from_edges(tmp_path):
+    src, dst, wgt = _random_edges(200, 3000, 11)
+    ref = CSRGraph.from_edges(200, src, dst, wgt)
+    path = tmp_path / "edges.txt"
+    write_edgelist(str(path), src, dst, wgt)
+    g = edgelist_to_csr(str(path), n=200, chunk_edges=997)
+    assert _csr_equal(g, ref)
+
+
+def test_csr_cache_roundtrip_is_memmap(tmp_path, small_graph):
+    d = save_csr(small_graph, str(tmp_path / "cache"))
+    g = load_csr(d)
+    assert isinstance(g.col, np.memmap)
+    assert isinstance(g.row_ptr, np.memmap)
+    assert _csr_equal(g, small_graph)
+    g2 = load_csr(d, mmap=False)
+    assert not isinstance(g2.col, np.memmap)
+    assert _csr_equal(g2, small_graph)
+
+
+def test_csr_cache_version_check(tmp_path, small_graph):
+    d = save_csr(small_graph, str(tmp_path / "c"))
+    meta = os.path.join(d, "meta.json")
+    with open(meta) as f:
+        text = f.read()
+    with open(meta, "w") as f:
+        f.write(text.replace(f'"version": {ingest.CSR_FORMAT_VERSION}',
+                             '"version": 0'))
+    with pytest.raises(ValueError, match="version"):
+        load_csr(d)
+
+
+def test_load_graph_edgelist_cache_hits(tmp_path):
+    src, dst, wgt = _random_edges(64, 400, 5)
+    path = tmp_path / "e.txt"
+    write_edgelist(str(path), src, dst, wgt)
+    cache = str(tmp_path / "cache")
+    g1 = load_graph(f"edgelist:{path},n=64", cache_dir=cache)
+    assert isinstance(g1.col, np.memmap)      # built then memmap-reloaded
+    subdirs = os.listdir(cache)
+    assert len(subdirs) == 1
+    g2 = load_graph(f"edgelist:{path},n=64", cache_dir=cache)  # cache hit
+    assert os.listdir(cache) == subdirs
+    assert _csr_equal(g1, g2)
+    assert _csr_equal(g1, CSRGraph.from_edges(64, src, dst, wgt))
+
+
+# ---------------------------------------------------------------- registry
+
+def test_parse_spec_grammar():
+    assert parse_spec("wec:k=8,deg=12") == ("wec", None, {"k": "8",
+                                                          "deg": "12"})
+    assert parse_spec("edgelist:/a/b.txt,n=10") == (
+        "edgelist", "/a/b.txt", {"n": "10"})
+    with pytest.raises(ValueError, match="two positional"):
+        parse_spec("edgelist:/a,/b")
+    with pytest.raises(ValueError, match="family"):
+        parse_spec(":k=1")
+
+
+@pytest.mark.parametrize("spec,builder", [
+    ("er:k=6,deg=6,seed=2", lambda: rmat.er(6, avg_degree=6, seed=2)),
+    ("wec:k=7,deg=10,seed=1", lambda: rmat.wec(7, avg_degree=10, seed=1)),
+    ("skew:s=3,k=7,deg=12,seed=0",
+     lambda: rmat.skew(3, k=7, avg_degree=12, seed=0)),
+    ("rmat:k=6,deg=8,a=0.45,b=0.22,c=0.22,d=0.11,seed=4",
+     lambda: rmat.rmat_graph(6, 8, 0.45, 0.22, 0.22, 0.11, seed=4)),
+])
+def test_registry_matches_direct_builders(spec, builder):
+    assert _csr_equal(load_graph(spec), builder())
+
+
+def test_registry_rejects_unknown_options():
+    with pytest.raises(ValueError, match="unknown option"):
+        load_graph("wec:k=6,degree=16")        # typo for deg=
+    with pytest.raises(ValueError, match="unknown option"):
+        load_graph("edgelist:/tmp/x.txt,cap=4")
+
+
+def test_relabeled_edgelist_cache_stores_final_layout(tmp_path):
+    src, dst, wgt = _random_edges(64, 500, 21)
+    path = tmp_path / "e.txt"
+    write_edgelist(str(path), src, dst, wgt)
+    spec = f"edgelist:{path},n=64,relabel=degree"
+    mem = load_dataset(spec)
+    cache = str(tmp_path / "cache")
+    disk = load_dataset(spec, cache_dir=cache)
+    assert _csr_equal(mem.graph, disk.graph)
+    assert np.array_equal(mem.perm, np.asarray(disk.perm))   # perm cached
+    # relabeled and plain specs cache to distinct entries
+    load_graph(f"edgelist:{path},n=64", cache_dir=cache)
+    assert len(os.listdir(cache)) == 2
+
+
+def test_registry_sbm_labels_and_errors():
+    ds = load_dataset("sbm:n=120,c=3,pin=0.1,pout=0.01,seed=0")
+    assert ds.labels is not None and ds.labels.shape == (120,)
+    assert ds.graph.n == 120
+    with pytest.raises(ValueError, match="unknown graph family"):
+        load_graph("livejournal:k=1")
+    with pytest.raises(ValueError, match="required"):
+        load_graph("wec:deg=10")
+    with pytest.raises(ValueError, match="relabel"):
+        load_graph("wec:k=6,relabel=random")
+
+
+# ----------------------------------------------------------------- relabel
+
+def test_relabel_by_degree_invariants(skewed_graph):
+    g = skewed_graph
+    r, perm = relabel_by_degree(g)
+    assert sorted(perm.tolist()) == list(range(g.n))
+    deg = r.deg
+    assert np.all(deg[:-1] >= deg[1:])            # descending
+    assert deg[0] == g.max_degree
+    # edges + weights preserved under the permutation
+    for v in [0, 1, g.n // 3, g.n - 1]:
+        nb, w = g.neighbors(v), g.weights(v)
+        order = np.argsort(perm[nb.astype(np.int64)])
+        assert np.array_equal(perm[nb.astype(np.int64)][order],
+                              r.neighbors(int(perm[v])))
+        assert np.array_equal(w[order], r.weights(int(perm[v])))
+
+
+def test_relabel_hot_set_is_prefix(skewed_graph):
+    cap = 24
+    r, _ = relabel_by_degree(skewed_graph)
+    hot = np.nonzero(r.deg > cap)[0]
+    assert np.array_equal(hot, np.arange(len(hot)))   # contiguous prefix
+
+
+def test_load_dataset_relabel_permutes_labels():
+    plain = load_dataset("sbm:n=120,c=3,pin=0.1,pout=0.01,seed=0")
+    rel = load_dataset("sbm:n=120,c=3,pin=0.1,pout=0.01,seed=0,"
+                       "relabel=degree")
+    assert rel.perm is not None
+    # label of old vertex v must follow v to its new id
+    assert np.array_equal(rel.labels[rel.perm], plain.labels)
+
+
+# ------------------------------------------------- sharded direct build
+
+@pytest.mark.parametrize("cap,num_shards", [
+    (None, 1), (None, 3), (24, 2), (24, 4), (8, 2),
+])
+def test_sharded_from_csr_matches_dense_path(skewed_graph, cap, num_shards):
+    """Shard-by-shard CSR pack == dense PaddedGraph -> ShardedGraph.build,
+    every field bit-identical (including the no-hot sentinel when
+    cap=None)."""
+    old = ShardedGraph.build(PaddedGraph.build(skewed_graph, cap=cap),
+                             num_shards)
+    new = ShardedGraph.from_csr(skewed_graph, num_shards, cap=cap)
+    assert (old.n, old.n_orig, old.cap, old.hot_cap, old.num_shards) == \
+           (new.n, new.n_orig, new.cap, new.hot_cap, new.num_shards)
+    for f in ("adj", "wgt", "alias_p", "alias_i", "deg", "hot_ids",
+              "hot_adj", "hot_wgt", "hot_alias_p", "hot_alias_i",
+              "hot_deg", "hot_wmin", "hot_wmax"):
+        a = np.asarray(getattr(old, f))
+        b = np.asarray(getattr(new, f))
+        assert a.shape == b.shape and np.array_equal(a, b), f
+
+
+# --------------------------------------- end-to-end roundtrip (acceptance)
+
+@pytest.mark.parametrize("relabel", [False, True])
+def test_roundtrip_walks_bit_identical_all_backends(tmp_path, relabel):
+    """edges -> chunked CSR -> disk cache -> memmap reload -> WalkEngine:
+    the in-memory and disk-cache graphs give bit-identical walks from one
+    WalkPlan + seed on all three backends (sharded runs on the in-process
+    single-device mesh), with and without the degree-relabeled layout."""
+    src, dst, wgt = _random_edges(128, 1500, 13)
+    path = tmp_path / "edges.txt"
+    write_edgelist(str(path), src, dst, wgt)
+    suffix = ",relabel=degree" if relabel else ""
+    spec = f"edgelist:{path},n=128{suffix}"
+
+    g_mem = load_graph(spec)                                  # in-memory
+    cache = str(tmp_path / "cache")
+    load_graph(spec, cache_dir=cache)                         # build cache
+    g_disk = load_graph(spec, cache_dir=cache)                # memmap hit
+    # the cache stores the *final* layout, so even the relabeled graph
+    # memmaps straight from disk (no per-load relabel pass)
+    assert isinstance(g_disk.col, np.memmap)
+    assert _csr_equal(g_mem, g_disk)
+
+    plan_kw = dict(p=0.5, q=2.0, length=8, cap=16)
+    walks = {}
+    for backend in ("reference", "sharded", "fused"):
+        plan = WalkPlan(backend=backend, **plan_kw)
+        w_mem = WalkEngine.build(g_mem, plan).run(seed=9)
+        w_disk = WalkEngine.build(g_disk, plan).run(seed=9)
+        assert np.array_equal(w_mem.walks, w_disk.walks), backend
+        assert w_disk.stats.dropped == 0
+        walks[backend] = w_mem.walks
+    assert np.array_equal(walks["reference"], walks["sharded"])
+    assert np.array_equal(walks["reference"], walks["fused"])
+
+
+def test_engine_builds_from_spec_string(small_graph):
+    plan = WalkPlan(p=0.5, q=2.0, length=5, cap=16)
+    via_spec = WalkEngine.build("wec:k=8,deg=12,seed=1", plan).run(seed=3)
+    direct = WalkEngine.build(small_graph, plan).run(seed=3)
+    assert np.array_equal(via_spec.walks, direct.walks)
