@@ -15,10 +15,10 @@ lint:          ## forbidden-API checks only (jax-0.4.37 quirks)
 bench:         ## run the benchmark battery (CSV rows to stdout)
 	PYTHONPATH=src python -m benchmarks.run
 
-bench-smoke:   ## emit BENCH_smoke.json + compare ratios vs baseline (warn >2x)
+bench-smoke:   ## emit BENCH_smoke.json + compare ratios vs baseline (gate >2x)
 	PYTHONPATH=src python -m benchmarks.bench_smoke BENCH_smoke.json
 	python scripts/bench_compare.py BENCH_smoke.json \
-	    benchmarks/baselines/BENCH_smoke.json
+	    benchmarks/baselines/BENCH_smoke.json --strict
 
 bench-baseline: ## refresh the committed bench-smoke baseline
 	PYTHONPATH=src python -m benchmarks.bench_smoke \

@@ -22,7 +22,7 @@ from benchmarks.common import graph, time_fn
 from repro.core.graph import CSRGraph
 from repro.data.ingest import csr_from_chunks
 from repro.engine import WalkEngine, WalkPlan
-from repro.roofline.traffic import walk_collective_bytes
+from repro.roofline.traffic import walk_collective_bytes, walk_overlap_model
 
 SKEW_SPEC = "skew:s=4,k=9,deg=20,seed=3"
 CAP = 24
@@ -74,6 +74,23 @@ def _layout_metrics(g):
     }
 
 
+def _overlap_metrics(g):
+    # analytic superstep-pipeline model (roofline.traffic.walk_overlap_model)
+    # at 8 shards, one walker per vertex, length 20 — pure arithmetic over
+    # the layout, so these ratios are exact and regression-gated strictly
+    shards, length = 8, 20
+    n_local = -(-g.n // shards)
+    barrier = walk_overlap_model(shards, n_local, CAP, length,
+                                 walkers_per_shard=n_local, pipeline=False)
+    pipe = walk_overlap_model(shards, (n_local + 1) // 2, CAP, length,
+                              walkers_per_shard=n_local, pipeline=True)
+    return {
+        "overlap_exposed_over_barrier":
+            pipe["exposed_bytes"] / barrier["exposed_bytes"],
+        "overlap_efficiency_pipelined": pipe["efficiency"],
+    }
+
+
 def _walk_metrics(g, info):
     kw = dict(p=0.5, q=2.0, length=10, cap=CAP)
     engines = {
@@ -99,6 +116,7 @@ def run(out_path: str = "BENCH_smoke.json") -> dict:
     metrics = {}
     metrics.update(_ingest_metrics(info))
     metrics.update(_layout_metrics(g))
+    metrics.update(_overlap_metrics(g))
     metrics.update(_walk_metrics(g, info))
     doc = {"version": 1, "metrics": metrics, "info": info}
     with open(out_path, "w") as f:

@@ -48,6 +48,7 @@ class Node2VecConfig:
     backend: Optional[str] = None  # None -> sharded iff a mesh is given
     capacity: Optional[int] = None  # sharded request capacity per dest
     strict_drops: bool = False     # raise instead of warn on dropped requests
+    pipeline: bool = False         # async superstep pipeline (WalkPlan doc)
 
     def plan(self, mesh: Optional[Mesh] = None) -> WalkPlan:
         """The walk-stage half of this config as a ``WalkPlan`` — the single
@@ -58,7 +59,8 @@ class Node2VecConfig:
                         mode=self.mode, approx_eps=self.approx_eps,
                         backend=backend, cap=self.cap,
                         capacity=self.capacity,
-                        strict_drops=self.strict_drops)
+                        strict_drops=self.strict_drops,
+                        pipeline=self.pipeline)
 
 
 def generate_walks(g: CSRGraph, cfg: Node2VecConfig,

@@ -32,12 +32,26 @@ RNG keys are ``fold_in(seed, global_walker_id, step)`` — identical to the
 single-device reference, so distributed walks are **bit-identical** to
 the reference backend (validated in tests).
 
-Capacity: the request exchange has a static per-destination capacity ``C``.
-Requests beyond C are *dropped* (walker stays put for that step) and counted
-in the returned diagnostics (surfaced as ``WalkStats.dropped``); exact-mode
-callers size C so drops are zero (tests assert this). The paper's FN-Multi
-(walker rounds) is the production lever for bounding C — see
-``runtime/fault_tolerance.py``.
+Capacity: the request exchange has a static per-destination capacity ``C``
+*per exchange*. Requests beyond C are *dropped* (walker stays put for that
+step) and counted in the returned diagnostics (surfaced as
+``WalkStats.dropped``); exact-mode callers size C so drops are zero (tests
+assert this). The paper's FN-Multi (walker rounds) is the production lever
+for bounding C — see ``runtime/fault_tolerance.py``.
+
+Async superstep pipeline (``WalkPlan.pipeline``, DESIGN.md §12): walkers on
+each shard split into two fixed cohorts (A = first ceil(W/2) local rows).
+The barrier loop's issue-exchange/compute halves are re-interleaved so
+cohort B's step-k NEIG exchange is on the wire while cohort A's walkers
+advance through step k, and A's step-(k+1) exchange issues before B's
+step-k compute — each collective hides behind the other cohort's sampling
+work. Cohorts never read each other's state and per-(walker, step) RNG keys
+are layout-independent, so pipelined walks are **bit-identical** to barrier
+walks (tested). The last superstep is peeled out of the scan so no dangling
+exchange is issued past the end of the walk. Cohort exchanges carry half
+the walkers, so the zero-drop capacity default also halves — per-superstep
+total bytes stay at the barrier level, split across two overlapped
+messages.
 
 DEPRECATED: ``distributed_walks`` is kept as a thin shim; new code goes
 through ``repro.engine.WalkEngine`` (DESIGN.md §4).
@@ -291,21 +305,27 @@ def _widen(x: jnp.ndarray, width: int, fill) -> jnp.ndarray:
     return jnp.concatenate([x, pad], axis=-1)
 
 
-def _sharded_step(g: ShardedGraph, adj, wgt, alias_p, alias_i, deg,
-                  u, v, prev_ids, prev_deg, step, seed_key, walker_ids,
-                  sampler: Sampler, capacity: int):
-    """One superstep for the local walker block (runs inside shard_map)."""
+def _issue_exchange(g: ShardedGraph, adj, wgt, v, capacity: int):
+    """Issue the two-phase NEIG pull for a walker cohort at positions ``v``.
+
+    This is the *communication half* of a superstep: bucket the remote
+    requests, all_to_all the ids out, gather the local rows for incoming
+    requests, and all_to_all the rows back. It depends only on ``v`` (and
+    the graph), never on the sampling state, so the pipelined walk body can
+    issue one cohort's exchange before (= overlapped with) the other
+    cohort's compute. Returns the exchange state consumed by
+    ``_finish_step``: (resp_i [S*C, cap], resp_w, slot [Wc], dropped [Wc]).
+    """
     num_shards = g.num_shards
     n_local = adj.shape[0]
     my_shard = jax.lax.axis_index(RW_AXIS)
     shard_offset = my_shard.astype(jnp.int32) * n_local
 
-    is_hot_v, hot_pos_v = _hot_lookup(g.hot_ids, v)
+    is_hot_v, _ = _hot_lookup(g.hot_ids, v)
     dest = (v // n_local).astype(jnp.int32)
     is_local = dest == my_shard
     needs_remote = (~is_hot_v) & (~is_local)
 
-    # --- NEIG pull: two-phase all_to_all (request ids, response rows) ---
     buf, slot, dropped = _bucket_requests(dest, needs_remote, v, num_shards,
                                           capacity)
     req = buf.reshape(num_shards, capacity)
@@ -319,6 +339,18 @@ def _sharded_step(g: ShardedGraph, adj, wgt, alias_p, alias_i, deg,
     resp_w = jax.lax.all_to_all(rows_w, RW_AXIS, 0, 0, tiled=True)
     resp_i = resp_i.reshape(num_shards * capacity, g.cap)
     resp_w = resp_w.reshape(num_shards * capacity, g.cap)
+    return resp_i, resp_w, slot, dropped
+
+
+def _finish_step(g: ShardedGraph, adj, wgt, u, v, prev_ids, prev_deg, step,
+                 seed_key, walker_ids, sampler: Sampler, exchange):
+    """Compute half of a superstep: candidate assembly + the 2nd-order draw,
+    given the already-exchanged NEIG responses for this cohort."""
+    resp_i, resp_w, slot, dropped = exchange
+    n_local = adj.shape[0]
+    my_shard = jax.lax.axis_index(RW_AXIS)
+    shard_offset = my_shard.astype(jnp.int32) * n_local
+    is_hot_v, hot_pos_v = _hot_lookup(g.hot_ids, v)
 
     # --- assemble candidate rows per walker (local / remote / hot) ---
     v_local_idx = jnp.clip(v - shard_offset, 0, n_local - 1)
@@ -381,6 +413,16 @@ def _sharded_step(g: ShardedGraph, adj, wgt, alias_p, alias_i, deg,
     return nxt, new_prev_ids, deg_v, dropped
 
 
+def _sharded_step(g: ShardedGraph, adj, wgt, alias_p, alias_i, deg,
+                  u, v, prev_ids, prev_deg, step, seed_key, walker_ids,
+                  sampler: Sampler, capacity: int):
+    """One barrier superstep for the local walker block: exchange, then
+    compute — the two halves back-to-back (runs inside shard_map)."""
+    exchange = _issue_exchange(g, adj, wgt, v, capacity)
+    return _finish_step(g, adj, wgt, u, v, prev_ids, prev_deg, step,
+                        seed_key, walker_ids, sampler, exchange)
+
+
 def _first_step_local(g: ShardedGraph, adj, wgt, alias_p, alias_i, deg,
                       starts, seed_key, walker_ids):
     """Step 0: starts are local by construction; 1st-order alias draw."""
@@ -406,21 +448,38 @@ def _first_step_local(g: ShardedGraph, adj, wgt, alias_p, alias_i, deg,
 
 
 def make_distributed_walk(g: ShardedGraph, mesh: Mesh, params: WalkParams,
-                          capacity: int, length: Optional[int] = None):
+                          capacity: int, length: Optional[int] = None,
+                          pipeline: bool = False):
     """Build the jitted distributed walk fn over ``mesh`` (all axes flattened
     into the ``rw`` axis via an abstract mesh reshape is the caller's job —
-    this function expects a 1-D mesh with axis name 'rw')."""
+    this function expects a 1-D mesh with axis name 'rw').
+
+    ``pipeline=True`` selects the double-buffered async-superstep body: the
+    local walker block is split into two independent cohorts (A = first
+    ceil(W/2) rows, B = the rest; walks are per-walker so any split is
+    legal), and each cohort's NEIG exchange is issued in program order
+    *before* the other cohort's compute — on hardware with async collectives
+    the exchange hides behind the sampling work (DESIGN.md §12). ``capacity``
+    is per destination *per exchange* in both modes; because a cohort is a
+    subset of the block, a walker's within-cohort request rank never exceeds
+    its barrier-mode rank, so pipelined drops are a subset of barrier drops
+    at equal capacity (and both are zero at the engine's defaults). Walks
+    are bit-identical to the barrier body (tested).
+    """
     length = length or params.length
     sampler = params.sampler() if isinstance(params, WalkParams) else params
     pspec_rows = P(RW_AXIS)
     rep = P()
 
-    def walk_body(adj, wgt, alias_p, alias_i, deg, hot_pack, starts,
-                  walker_ids, seed_key):
-        gl = dataclasses.replace(
+    def make_local(hot_pack):
+        return dataclasses.replace(
             g, hot_ids=hot_pack[0], hot_adj=hot_pack[1], hot_wgt=hot_pack[2],
             hot_alias_p=hot_pack[3], hot_alias_i=hot_pack[4],
             hot_deg=hot_pack[5], hot_wmin=hot_pack[6], hot_wmax=hot_pack[7])
+
+    def walk_body(adj, wgt, alias_p, alias_i, deg, hot_pack, starts,
+                  walker_ids, seed_key):
+        gl = make_local(hot_pack)
         v1, prev_ids, prev_deg = _first_step_local(
             gl, adj, wgt, alias_p, alias_i, deg, starts, seed_key, walker_ids)
 
@@ -438,8 +497,72 @@ def make_distributed_walk(g: ShardedGraph, mesh: Mesh, params: WalkParams,
         walks = jnp.concatenate([steps.T, v_last[:, None]], axis=1)
         return walks, jax.lax.psum(drops, RW_AXIS)
 
+    def walk_body_pipelined(adj, wgt, alias_p, alias_i, deg, hot_pack,
+                            starts, walker_ids, seed_key):
+        gl = make_local(hot_pack)
+        w_local = starts.shape[0]
+        wa = (w_local + 1) // 2          # cohort A size (static)
+        v1, prev_ids, prev_deg = _first_step_local(
+            gl, adj, wgt, alias_p, alias_i, deg, starts, seed_key, walker_ids)
+
+        def split(x):
+            return x[:wa], x[wa:]
+
+        u_a, u_b = split(starts)
+        v_a, v_b = split(v1)
+        p_a, p_b = split(prev_ids)
+        pd_a, pd_b = split(prev_deg)
+        wid_a, wid_b = split(walker_ids)
+
+        def finish(u, v, p_ids, p_deg, wids, s, exch):
+            return _finish_step(gl, adj, wgt, u, v, p_ids, p_deg, s,
+                                seed_key, wids, sampler, exch)
+
+        # pipeline prologue: A's step-1 exchange (nothing to hide behind)
+        exch_a = _issue_exchange(gl, adj, wgt, v_a, capacity)
+
+        def body(carry, s):
+            (u_a, v_a, p_a, pd_a, u_b, v_b, p_b, pd_b, exch_a, drops) = carry
+            # B's step-s exchange: issued BEFORE A's compute — overlaps it
+            exch_b = _issue_exchange(gl, adj, wgt, v_b, capacity)
+            nxt_a, np_a, deg_a, drop_a = finish(u_a, v_a, p_a, pd_a, wid_a,
+                                                s, exch_a)
+            # A's step-(s+1) exchange: issued BEFORE B's compute
+            exch_a = _issue_exchange(gl, adj, wgt, nxt_a, capacity)
+            nxt_b, np_b, deg_b, drop_b = finish(u_b, v_b, p_b, pd_b, wid_b,
+                                                s, exch_b)
+            drops = drops + jnp.sum(drop_a.astype(jnp.int32)) \
+                + jnp.sum(drop_b.astype(jnp.int32))
+            emit = jnp.concatenate([v_a, v_b])
+            return (v_a, nxt_a, np_a, deg_a, v_b, nxt_b, np_b, deg_b,
+                    exch_a, drops), emit
+
+        init = (u_a, v_a, p_a, pd_a, u_b, v_b, p_b, pd_b, exch_a,
+                jnp.zeros((), jnp.int32))
+        # peel the last superstep so no dangling prefetch is ever issued
+        carry, steps = jax.lax.scan(
+            body, init, jnp.arange(1, length - 1, dtype=jnp.int32))
+        (u_a, v_a, p_a, pd_a, u_b, v_b, p_b, pd_b, exch_a, drops) = carry
+        s_last = jnp.asarray(length - 1, jnp.int32)
+        exch_b = _issue_exchange(gl, adj, wgt, v_b, capacity)
+        nxt_a, _, _, drop_a = finish(u_a, v_a, p_a, pd_a, wid_a, s_last,
+                                     exch_a)
+        nxt_b, _, _, drop_b = finish(u_b, v_b, p_b, pd_b, wid_b, s_last,
+                                     exch_b)
+        drops = drops + jnp.sum(drop_a.astype(jnp.int32)) \
+            + jnp.sum(drop_b.astype(jnp.int32))
+        v_prev = jnp.concatenate([v_a, v_b])
+        v_last = jnp.concatenate([nxt_a, nxt_b])
+        walks = jnp.concatenate(
+            [steps.T, v_prev[:, None], v_last[:, None]], axis=1) \
+            if length > 2 else jnp.concatenate(
+                [v_prev[:, None], v_last[:, None]], axis=1)
+        return walks, jax.lax.psum(drops, RW_AXIS)
+
+    # length 1 has no exchanging supersteps — nothing to pipeline
+    body_fn = walk_body_pipelined if pipeline and length >= 2 else walk_body
     shard_fn = _shard_map(
-        walk_body, mesh=mesh,
+        body_fn, mesh=mesh,
         in_specs=(pspec_rows, pspec_rows, pspec_rows, pspec_rows, pspec_rows,
                   rep, pspec_rows, pspec_rows, rep),
         out_specs=(pspec_rows, rep))

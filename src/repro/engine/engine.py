@@ -27,12 +27,12 @@ import numpy as np
 from jax.sharding import Mesh
 
 from repro.core.graph import PaddedGraph
-from repro.core.walk import run_reference
+from repro.core.walk import run_fused_persistent, run_reference
 from repro.core.walk_distributed import (ShardedGraph, make_distributed_walk)
 from repro.engine.plan import WalkPlan, WalkResult, WalkStats
 from repro.launch.mesh import make_rw_mesh
 from repro.roofline import analysis as roof
-from repro.roofline.traffic import walk_collective_bytes
+from repro.roofline.traffic import walk_collective_bytes, walk_overlap_model
 
 
 def round_seed(seed: int, r: int) -> int:
@@ -55,6 +55,8 @@ class WalkEngine:
         self._fn = fn
         self.capacity = capacity
         self._sampler = plan.sampler()
+        self._no_hot = pg is not None and \
+            int(np.asarray(pg.hot_pos).max(initial=-1)) < 0
 
     # ------------------------------------------------------------- build --
     @classmethod
@@ -99,9 +101,19 @@ class WalkEngine:
                                        hot_cap=plan.hot_cap)
         # capacity default = one full walker block per destination: zero
         # drops, any skew. FN-Multi rounds are the lever for lowering it.
-        capacity = plan.capacity if plan.capacity is not None else sg.n_local
+        # Pipelined mode exchanges per *cohort* (half blocks), so the
+        # zero-drop default halves too — total bytes per superstep stay at
+        # the barrier level while each exchange hides behind the other
+        # cohort's compute.
+        if plan.capacity is not None:
+            capacity = plan.capacity
+        elif plan.pipeline:
+            capacity = (sg.n_local + 1) // 2
+        else:
+            capacity = sg.n_local
         fn = make_distributed_walk(sg, rw, plan.params(), capacity,
-                                   length=plan.length)
+                                   length=plan.length,
+                                   pipeline=plan.pipeline)
         return cls(plan, pg=pg, sg=sg, mesh=rw, fn=fn, capacity=capacity)
 
     # --------------------------------------------------------------- run --
@@ -113,6 +125,15 @@ class WalkEngine:
     def _abstract(self) -> bool:
         return self.sg is not None and isinstance(self.sg.adj,
                                                   jax.ShapeDtypeStruct)
+
+    def _fused_persistent(self) -> bool:
+        """Pipelined fused backend: the multi-superstep Pallas kernel that
+        carries prev rows in VMEM is used when the layout lets it — exact
+        sampling and FN-Base (no hot set; walks of length >= 2). Otherwise
+        the per-step kernel path runs (bit-identical either way)."""
+        return (self.plan.backend == "fused" and self.plan.pipeline
+                and self._sampler.mode == "exact" and self.plan.length >= 2
+                and self._no_hot)
 
     def _sharded_args(self, starts, walker_ids, key):
         g = self.sg
@@ -128,8 +149,13 @@ class WalkEngine:
             starts = jnp.asarray(starts, jnp.int32)
             walker_ids = starts if walker_ids is None else \
                 jnp.asarray(walker_ids, jnp.int32)
-            walks = run_reference(self.pg, starts, walker_ids, key,
-                                  self._sampler, self.plan.length)
+            if self._fused_persistent():
+                walks = run_fused_persistent(self.pg, starts, walker_ids,
+                                             key, self._sampler,
+                                             self.plan.length)
+            else:
+                walks = run_reference(self.pg, starts, walker_ids, key,
+                                      self._sampler, self.plan.length)
             return walks, None, None
 
         if self._abstract():
@@ -178,10 +204,13 @@ class WalkEngine:
             if self.plan.strict_drops:
                 raise RuntimeError(msg)
             warnings.warn(msg, RuntimeWarning, stacklevel=3)
+        overlap = self._overlap_estimate(int(walks.shape[0]))
         stats = WalkStats(
             backend=self.plan.backend, walkers=int(walks.shape[0]),
             supersteps=self.plan.length, dropped=dropped,
-            collective_bytes=self._collective_estimate())
+            collective_bytes=overlap["total_bytes"],
+            exposed_collective_bytes=overlap["exposed_bytes"],
+            overlap_efficiency=overlap["efficiency"])
         return WalkResult(walks=walks, stats=stats)
 
     def _collective_estimate(self) -> int:
@@ -191,6 +220,20 @@ class WalkEngine:
         return walk_collective_bytes(self.sg.num_shards, self.capacity,
                                      self.sg.cap, self.plan.length,
                                      w_bytes=w_bytes)
+
+    def _overlap_estimate(self, walkers: int) -> dict:
+        """Analytic total/exposed collective bytes for a run of ``walkers``
+        walkers (``roofline.traffic.walk_overlap_model``)."""
+        if self.sg is None:
+            return {"total_bytes": 0, "exposed_bytes": 0, "efficiency": 0.0}
+        g = self.sg
+        w_bytes = np.dtype(g.wgt.dtype).itemsize
+        width = g.cap if self._sampler.mode == "approx_always" else g.hot_cap
+        return walk_overlap_model(
+            g.num_shards, self.capacity, g.cap, self.plan.length,
+            walkers_per_shard=max(walkers // g.num_shards, 1),
+            pipeline=self.plan.pipeline and self.plan.length >= 2,
+            w_bytes=w_bytes, width=width)
 
     def run(self, starts=None, seed: int = 0, walker_ids=None) -> WalkResult:
         """Walk ``starts`` (default: every vertex) with the bound plan."""
@@ -244,8 +287,13 @@ class WalkEngine:
             for x in (g.adj, g.wgt, g.alias_p, g.alias_i)) // g.num_shards \
             + sum(int(np.prod(x.shape)) * np.dtype(x.dtype).itemsize
                   for x in g.hot_pack())
+        overlap = self._overlap_estimate(num_walkers)
         return {
             "backend": self.plan.backend, "mode": self.plan.mode,
+            "pipeline": self.plan.pipeline,
+            "overlap_total_bytes": overlap["total_bytes"],
+            "overlap_exposed_bytes": overlap["exposed_bytes"],
+            "overlap_efficiency": overlap["efficiency"],
             "cap": g.cap, "hot_cap": g.hot_cap, "capacity": self.capacity,
             "shards": g.num_shards, "n": g.n,
             "walkers_per_shard": num_walkers // g.num_shards,

@@ -36,7 +36,16 @@ class WalkPlan:
     cap: Optional[int] = None         # cold row width (None -> FN-Base)
     hot_cap: Optional[int] = None     # hot row width (None -> max hot degree)
     capacity: Optional[int] = None    # sharded: request slots per destination
+                                      # *per exchange* (pipelined mode runs
+                                      # two half-size exchanges per superstep)
     strict_drops: bool = False        # raise (not warn) when requests drop
+    pipeline: bool = False            # async superstep pipeline (DESIGN §12):
+                                      # sharded -> double-buffered cohort
+                                      # exchange overlapped with compute;
+                                      # fused -> VMEM-persistent multi-step
+                                      # kernel (exact + FN-Base layout, else
+                                      # per-step kernel); reference -> no-op.
+                                      # Walks are bit-identical either way.
 
     def __post_init__(self):
         if self.backend not in BACKENDS:
@@ -76,12 +85,22 @@ class WalkStats:
                              ``repro.roofline.traffic`` (0 off-mesh); the
                              measured-from-HLO number comes from
                              ``WalkEngine.analyze()``.
+    ``exposed_collective_bytes`` — the subset of ``collective_bytes`` that
+                             sits on the superstep critical path (cannot
+                             hide behind walker compute). Barrier mode:
+                             equal to ``collective_bytes``. Pipelined mode:
+                             strictly smaller (``roofline.traffic.
+                             walk_overlap_model``).
+    ``overlap_efficiency`` — ``1 - exposed/total`` collective bytes; 0 when
+                             nothing is on the wire or nothing overlaps.
     """
     backend: str
     walkers: int
     supersteps: int
     dropped: int = 0
     collective_bytes: int = 0
+    exposed_collective_bytes: int = 0
+    overlap_efficiency: float = 0.0
 
 
 @dataclasses.dataclass(frozen=True)

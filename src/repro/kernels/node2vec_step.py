@@ -36,6 +36,7 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
 
 from repro.core.graph import PAD_ID
 
@@ -103,3 +104,105 @@ def node2vec_step(cand_ids: jnp.ndarray, cand_w: jnp.ndarray, u: jnp.ndarray,
         interpret=interpret,
     )(cand_ids, cand_w, u.reshape(wk, 1), prev_ids, rand.reshape(wk, 1))
     return out[:, 0]
+
+
+# ---------------------------------------------------------------------------
+# Multi-superstep persistent-walk kernel (WalkPlan.pipeline, fused backend)
+# ---------------------------------------------------------------------------
+#
+# The per-step kernel above re-reads the [BW, DP] prev-row block from HBM on
+# every superstep even though it is exactly the previous step's candidate
+# block, which was already resident in VMEM when that step ran. This kernel
+# runs the *whole* second-order walk for a walker block inside one
+# pallas_call: the prev rows live in a VMEM scratch buffer that is written
+# once per superstep (from the candidate block that is in VMEM anyway) and
+# never round-trips through HBM. Per superstep the only HBM traffic is the
+# candidate-row gather from the graph and one [BW] column of the output.
+#
+# Scope: exact sampling on the FN-Base layout (cap == max degree, empty hot
+# set) — the hot-cache/approx paths keep using the per-step kernel. Step 0
+# (the first-order alias draw) happens on the host; the kernel runs steps
+# 1..length-1 with host-precomputed uniforms (the RNG is a pure function of
+# (walker, step), so walks stay bit-identical to the reference backend).
+#
+# TPU caveat: the candidate gather is a dynamic row gather from the graph
+# block; on real hardware the graph block must fit VMEM (small/medium graphs
+# or a per-shard slice) — this container is interpret-only, where the gather
+# is exact but unprofiled.
+
+
+def _walk_kernel(adj_ref, wgt_ref, deg_ref, u0_ref, v1_ref, rand_ref,
+                 out_ref, prev_scratch, *, p_inv: float, q_inv: float,
+                 length: int):
+    adj = adj_ref[...]                # [n, D] i32 (graph block, VMEM)
+    wgt = wgt_ref[...]                # [n, D] f32
+    deg = deg_ref[...][:, 0]          # [n]    i32
+    # prev rows for step 1 = N(u0): gathered once, then carried in VMEM
+    prev_scratch[...] = jnp.take(adj, u0_ref[...][:, 0], axis=0)
+
+    def body(s, carry):
+        u, v = carry                                  # [BW] each
+        cand = jnp.take(adj, v, axis=0)               # [BW, D]
+        w = jnp.take(wgt, v, axis=0)
+
+        # membership vs the VMEM-carried prev rows, LANE-chunked (same
+        # bounded working set as the per-step kernel)
+        def mem_body(k, member):
+            chunk = prev_scratch[:, pl.dslice(k * LANE, LANE)]
+            eq = cand[:, :, None] == chunk[:, None, :]
+            return member | jnp.any(eq, axis=-1)
+
+        member = jax.lax.fori_loop(0, cand.shape[-1] // LANE, mem_body,
+                                   jnp.zeros(cand.shape, jnp.bool_))
+        is_u = cand == u[:, None]
+        valid = cand != PAD_ID
+        alpha = jnp.where(is_u, p_inv, jnp.where(member, 1.0, q_inv))
+        probs = jnp.where(valid, alpha * w, 0.0)
+        cum = jnp.cumsum(probs, axis=-1)
+        target = rand_ref[:, pl.dslice(s, 1)] * cum[:, -1:]
+        slot = jnp.sum(((cum <= target) & valid).astype(jnp.int32), axis=-1)
+        slot = jnp.minimum(slot, cand.shape[-1] - 1)
+        nxt = jnp.take_along_axis(cand, slot[:, None], axis=1)[:, 0]
+        nxt = jnp.where(jnp.take(deg, v) > 0, nxt, v)  # dead end: stay
+        prev_scratch[...] = cand                       # N(v) for step s+2
+        out_ref[:, pl.dslice(s, 1)] = nxt[:, None]
+        return v, nxt
+
+    jax.lax.fori_loop(0, length - 1, body, (u0_ref[...][:, 0],
+                                            v1_ref[...][:, 0]))
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("p", "q", "block_w", "interpret"))
+def node2vec_walk(adj: jnp.ndarray, wgt: jnp.ndarray, deg: jnp.ndarray,
+                  u0: jnp.ndarray, v1: jnp.ndarray, rand: jnp.ndarray,
+                  p: float, q: float, block_w: int = 256,
+                  interpret: bool = False) -> jnp.ndarray:
+    """Persistent fused walk: steps 1..length-1 for all walkers, prev rows
+    carried in VMEM. adj/wgt [n, D] (D a LANE multiple), deg [n], u0/v1 [W]
+    (start vertex / step-0 result), rand [W, length-1] uniforms. Returns
+    [W, length-1] sampled vertices (v_2..v_length)."""
+    n, d = adj.shape
+    wk, steps = rand.shape
+    assert d % LANE == 0, d
+    assert wk % block_w == 0, (wk, block_w)
+    grid = (wk // block_w,)
+    kernel = functools.partial(_walk_kernel, p_inv=1.0 / p, q_inv=1.0 / q,
+                               length=steps + 1)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((n, d), lambda i: (0, 0)),       # graph: replicated
+            pl.BlockSpec((n, d), lambda i: (0, 0)),
+            pl.BlockSpec((n, 1), lambda i: (0, 0)),
+            pl.BlockSpec((block_w, 1), lambda i: (i, 0)),
+            pl.BlockSpec((block_w, 1), lambda i: (i, 0)),
+            pl.BlockSpec((block_w, steps), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((block_w, steps), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((wk, steps), jnp.int32),
+        scratch_shapes=[pltpu.VMEM((block_w, d), jnp.int32)],
+        interpret=interpret,
+    )(adj, wgt, deg.reshape(n, 1), u0.reshape(wk, 1), v1.reshape(wk, 1),
+      rand)

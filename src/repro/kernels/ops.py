@@ -51,6 +51,26 @@ def node2vec_step_op(cand_ids, cand_w, u, prev_ids, rand, p: float, q: float,
     return slots[:w]
 
 
+def node2vec_walk_op(adj, wgt, deg, u0, v1, rand, p: float, q: float,
+                     block_w: int = 256, interpret=None) -> jnp.ndarray:
+    """Persistent fused walk (prev rows carried in VMEM across supersteps);
+    pads the graph width to the lane multiple and the walker count to the
+    block multiple, then unpads. Returns [W, steps] sampled vertices."""
+    if interpret is None:
+        interpret = not _on_tpu()
+    w = u0.shape[0]
+    bw = min(block_w, max(8, 1 << (w - 1).bit_length()))
+    adj = _pad_axis(adj, 1, _step.LANE, PAD_ID)
+    wgt = _pad_axis(wgt, 1, _step.LANE, 0.0)
+    u0 = _pad_axis(u0, 0, bw, 0)
+    v1 = _pad_axis(v1, 0, bw, 0)
+    rand = _pad_axis(rand, 0, bw, 0.0)
+    out = _step.node2vec_walk(adj, wgt, deg, u0, v1, rand, p, q,
+                              block_w=min(bw, u0.shape[0]),
+                              interpret=interpret)
+    return out[:w]
+
+
 def flash_attention_op(q, k, v, window: int = 0, causal: bool = True,
                        block: int = 128, interpret=None):
     """Flash attention over model-layout tensors: q [B,S,H,dh],

@@ -21,27 +21,120 @@ decode (per device, per step):
 """
 from __future__ import annotations
 
+from typing import Optional
+
 from repro.models.config import ModelConfig
 
 BF16 = 2
 F32 = 4
 
 
+def walk_exchange_bytes(num_shards: int, capacity: int, cap: int,
+                        w_bytes: int = F32) -> int:
+    """Per-device bytes of ONE two-phase NEIG exchange: the request buffer
+    (S x C x 4B ids out) plus the response rows (S x C x cap x (4B ids +
+    w_bytes weights), two tiled all_to_alls)."""
+    ids = 4
+    return num_shards * capacity * (ids + cap * (ids + w_bytes))
+
+
 def walk_collective_bytes(num_shards: int, capacity: int, cap: int,
                           length: int, w_bytes: int = F32) -> int:
-    """Analytic per-device NEIG-exchange bytes for one full walk
-    (``WalkStats.collective_bytes``).
+    """Analytic per-device NEIG-exchange bytes for one full *barrier-mode*
+    walk (``WalkStats.collective_bytes``).
 
-    Per superstep each device moves: the request buffer (S x C x 4B ids out)
-    plus the response rows (S x C x cap x (4B ids + w_bytes weights), two
-    tiled all_to_alls). Step 0 is purely local (walkers start co-located),
-    so there are ``length - 1`` exchanging supersteps. This is the quantity
-    the paper's Figs. 4/14 measure; the measured-from-HLO counterpart is
-    ``WalkEngine.analyze()``.
+    One exchange per superstep; step 0 is purely local (walkers start
+    co-located), so there are ``length - 1`` exchanging supersteps. This is
+    the quantity the paper's Figs. 4/14 measure; the measured-from-HLO
+    counterpart is ``WalkEngine.analyze()``.
     """
-    ids = 4
-    per_step = num_shards * capacity * (ids + cap * (ids + w_bytes))
+    per_step = walk_exchange_bytes(num_shards, capacity, cap, w_bytes)
     return per_step * max(length - 1, 0)
+
+
+def walk_step_flops(walkers: int, width: int) -> float:
+    """Analytic per-device sampling FLOPs for one superstep over ``walkers``
+    walkers with candidate rows of ``width`` lanes.
+
+    Dominant terms per walker: the membership test (a [width x width]
+    equality/any reduction of candidates against the carried prev row), plus
+    O(width) alpha select / probs multiply / cumsum / compare-count lanes.
+    Napkin math on purpose (same spirit as ``analytic_bytes`` above) — it
+    only feeds the overlap model's hide-capacity estimate, never a pass/fail
+    gate on absolute time.
+    """
+    return float(walkers) * (float(width) * float(width) + 8.0 * width)
+
+
+def walk_step_bytes(walkers: int, width: int) -> float:
+    """Analytic per-device HBM bytes of one superstep's sampling phase.
+
+    The unfused jnp path materializes the membership booleans (a
+    [walkers x width x width] broadcast, ~1B/lane) plus ~6 f32
+    [walkers x width] streams (alpha, probs, cumsum read+write,
+    compare-count) — see the node2vec_step kernel docstring. The walk step
+    is memory-bound, so this (not FLOPs) is what sets the compute-phase
+    duration the pipeline can hide an exchange behind.
+    """
+    return float(walkers) * (float(width) * float(width) + 24.0 * width)
+
+
+def walk_overlap_model(num_shards: int, capacity: int, cap: int, length: int,
+                       walkers_per_shard: int, pipeline: bool,
+                       w_bytes: int = F32, width: Optional[int] = None,
+                       peak_flops: Optional[float] = None,
+                       hbm_bw: Optional[float] = None,
+                       link_bw: Optional[float] = None) -> dict:
+    """Analytic exposed-vs-total collective model for one walk.
+
+    Barrier mode: every NEIG exchange sits on the superstep critical path —
+    exposed == total, overlap efficiency 0.
+
+    Pipelined mode (two walker cohorts A/B, double-buffered; see
+    ``core.walk_distributed``): cohort B's step-k exchange is issued before
+    cohort A's step-k compute, and A's step-(k+1) exchange before B's step-k
+    compute, so each exchange can hide behind the other cohort's sampling
+    work. Per overlapped exchange the *exposed* bytes are
+    ``max(0, e - t_compute * LINK_BW)`` where ``e`` is the per-exchange
+    bytes at the (per-cohort) capacity and ``t_compute`` is the roofline
+    compute-time estimate of the hiding cohort's step — the max of its FLOP
+    time and its HBM time (the step is memory-bound; ``walk_step_bytes``).
+    The pipeline prologue (cohort A's step-1 exchange) has nothing to hide
+    behind and stays fully exposed.
+
+    Returns ``{"total_bytes", "exposed_bytes", "efficiency"}`` with
+    ``efficiency = 1 - exposed/total`` (0 when nothing is on the wire).
+    """
+    from repro.roofline import analysis as roof
+    peak_flops = peak_flops or roof.PEAK_FLOPS
+    hbm_bw = hbm_bw or roof.HBM_BW
+    link_bw = link_bw or roof.LINK_BW
+    width = width or cap
+    steps = max(length - 1, 0)
+    if steps == 0 or num_shards <= 1:
+        return {"total_bytes": 0, "exposed_bytes": 0, "efficiency": 0.0}
+    if not pipeline:
+        total = walk_exchange_bytes(num_shards, capacity, cap, w_bytes) * steps
+        return {"total_bytes": total, "exposed_bytes": total,
+                "efficiency": 0.0}
+    w_a = (walkers_per_shard + 1) // 2          # cohort A = ceil half
+    w_b = walkers_per_shard - w_a
+    e = walk_exchange_bytes(num_shards, capacity, cap, w_bytes)
+
+    def hide(w):
+        t = max(walk_step_flops(w, width) / peak_flops,
+                walk_step_bytes(w, width) / hbm_bw)
+        return t * link_bw
+
+    hide_a, hide_b = hide(w_a), hide(w_b)
+    # A: 1 prologue (fully exposed) + steps-1 body exchanges hidden behind
+    # B's compute; B: steps exchanges hidden behind A's compute.
+    total = e * (2 * steps)
+    exposed = e \
+        + (steps - 1) * max(0.0, e - hide_b) \
+        + steps * max(0.0, e - hide_a)
+    return {"total_bytes": int(total), "exposed_bytes": int(exposed),
+            "efficiency": 1.0 - exposed / total if total else 0.0}
 
 
 def _shards(mesh_shape: dict) -> tuple[int, int, int]:

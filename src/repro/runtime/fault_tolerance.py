@@ -25,7 +25,7 @@ from jax.sharding import Mesh
 from repro.checkpoint.checkpointer import Checkpointer
 from repro.core.graph import CSRGraph
 from repro.core.node2vec import Node2VecConfig
-from repro.engine import WalkEngine, round_seed
+from repro.engine import WalkEngine, WalkStats, round_seed
 
 
 class WalkRoundRunner:
@@ -37,6 +37,12 @@ class WalkRoundRunner:
     overlapping walk generation with optimization). Walks run through the
     unified ``WalkEngine`` — the engine (and its compiled walk fn) is built
     once per runner, so rounds never re-trace.
+
+    Per-round :class:`WalkStats` are kept in ``round_stats`` and the
+    *cumulative* drop/overlap accounting rides in the checkpoint meta, so a
+    resumed run reports the same totals as an uninterrupted one (tested in
+    tests/test_runtime.py) — dropped requests from pre-crash rounds are not
+    forgotten, and the overlap-efficiency of the plan survives the restart.
     """
 
     def __init__(self, g: CSRGraph, cfg: Node2VecConfig,
@@ -53,6 +59,8 @@ class WalkRoundRunner:
         if cfg.mode == "exact":
             plan = dataclasses.replace(plan, strict_drops=True)
         self.engine = WalkEngine.build(g, plan, mesh=mesh)
+        self.round_stats: dict = {}   # round -> WalkStats (this process)
+        self.total_dropped = 0        # cumulative, survives resume via meta
 
     def completed_rounds(self) -> int:
         if self.ckpt is None:
@@ -61,14 +69,31 @@ class WalkRoundRunner:
         return 0 if step is None else step
 
     def run_round(self, r: int) -> np.ndarray:
-        return self.engine.run(seed=round_seed(self.cfg.seed, r)).walks
+        res = self.engine.run(seed=round_seed(self.cfg.seed, r))
+        self.round_stats[r] = res.stats
+        self.total_dropped += res.stats.dropped
+        return res.walks
+
+    def stats_summary(self) -> dict:
+        """Cumulative accounting across yielded rounds (including rounds
+        restored from a checkpoint): total dropped requests plus the plan's
+        exposed-vs-total collective bytes and overlap efficiency."""
+        exposed = sum(s.exposed_collective_bytes
+                      for s in self.round_stats.values())
+        total = sum(s.collective_bytes for s in self.round_stats.values())
+        return {"dropped": self.total_dropped,
+                "exposed_collective_bytes": exposed,
+                "collective_bytes": total,
+                "overlap_efficiency":
+                    1.0 - exposed / total if total else 0.0}
 
     def rounds(self) -> Iterator[np.ndarray]:
         start = self.completed_rounds()
         done = []
         if start and self.ckpt is not None:
-            (prev,), _ = self.ckpt.restore((np.zeros(
+            (prev,), meta = self.ckpt.restore((np.zeros(
                 (start * self.g.n, self.cfg.walk_length), np.int32),))
+            self.total_dropped = int((meta or {}).get("dropped", 0))
             done = [prev[i * self.g.n:(i + 1) * self.g.n]
                     for i in range(start)]
             for w in done:
@@ -77,8 +102,15 @@ class WalkRoundRunner:
             walks = self.run_round(r)
             done.append(walks)
             if self.ckpt is not None:
+                s = self.round_stats[r]
                 self.ckpt.save(r + 1, (np.concatenate(done, axis=0),),
-                               meta={"round": r + 1}, blocking=False)
+                               meta={"round": r + 1,
+                                     "dropped": self.total_dropped,
+                                     "exposed_collective_bytes":
+                                         s.exposed_collective_bytes,
+                                     "overlap_efficiency":
+                                         s.overlap_efficiency},
+                               blocking=False)
             yield walks
         if self.ckpt is not None:
             self.ckpt.wait()

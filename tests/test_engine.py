@@ -108,6 +108,132 @@ def test_stats_surface_drops_and_strict_flag():
     _run_subprocess(DROPS_SCRIPT)
 
 
+@pytest.mark.parametrize("wk,length", [(32, 8), (7, 5), (5, 2)])
+def test_fused_persistent_pipeline_parity(small_graph, wk, length):
+    """WalkPlan.pipeline on the fused backend routes exact FN-Base walks to
+    the multi-superstep Pallas kernel (prev rows carried in VMEM) — walks
+    must stay bit-identical to the reference backend, including odd walker
+    counts and the minimal length-2 walk."""
+    kw = dict(p=0.5, q=2.0, length=length)       # cap=None -> FN-Base
+    ref = WalkEngine.build(small_graph, WalkPlan(backend="reference", **kw))
+    fus = WalkEngine.build(small_graph,
+                           WalkPlan(backend="fused", pipeline=True, **kw))
+    assert fus._fused_persistent()               # the kernel path is live
+    starts = ((np.arange(wk) * 3) % small_graph.n).astype(np.int32)
+    wid = np.arange(wk, dtype=np.int32)
+    r = ref.run(starts=starts, seed=11, walker_ids=wid)
+    f = fus.run(starts=starts, seed=11, walker_ids=wid)
+    assert np.array_equal(r.walks, f.walks)
+
+
+@pytest.mark.parametrize("mode", ["approx", "approx_always"])
+def test_fused_pipeline_fallback_parity(skewed_graph, mode):
+    """Outside the persistent kernel's scope (hot-cache layout / approx
+    sampling) the pipeline flag falls back to the per-step kernel — still
+    bit-identical to the reference."""
+    kw = dict(p=0.5, q=2.0, length=6, mode=mode, approx_eps=5e-2, cap=24)
+    ref = WalkEngine.build(skewed_graph, WalkPlan(backend="reference", **kw))
+    fus = WalkEngine.build(skewed_graph,
+                           WalkPlan(backend="fused", pipeline=True, **kw))
+    assert not fus._fused_persistent()
+    assert np.array_equal(ref.run(seed=3).walks, fus.run(seed=3).walks)
+
+
+def test_pipeline_flag_noop_on_reference(small_graph):
+    """pipeline=True is a no-op for the reference backend: identical walks
+    and zero overlap accounting (nothing is on the wire)."""
+    kw = dict(p=0.5, q=2.0, length=6, cap=16)
+    a = WalkEngine.build(small_graph, WalkPlan(**kw)).run(seed=4)
+    b = WalkEngine.build(small_graph,
+                         WalkPlan(pipeline=True, **kw)).run(seed=4)
+    assert np.array_equal(a.walks, b.walks)
+    assert b.stats.exposed_collective_bytes == 0
+    assert b.stats.overlap_efficiency == 0.0
+
+
+PIPELINE_PARITY_SCRIPT = textwrap.dedent("""
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=2"
+    import numpy as np, jax
+    from repro.core import rmat
+    from repro.engine import WalkEngine, WalkPlan
+
+    g = rmat.skew(4, k=8, avg_degree=16, seed=3)
+    half = g.n // 2
+    # odd per-shard counts give shard-misaligned cohort splits
+    # (5 walkers/shard -> cohorts of 3 and 2); length 2 exercises the
+    # peeled-epilogue-only pipeline
+    for per_shard, length in ((8, 10), (5, 7), (3, 2)):
+        a = (np.arange(per_shard, dtype=np.int32) * 7) % half
+        starts = np.concatenate([a, a + half])
+        wid = np.arange(starts.shape[0], dtype=np.int32)
+        kw = dict(p=0.5, q=2.0, length=length, mode="{mode}",
+                  approx_eps=5e-2, cap=24, strict_drops=True)
+        runs = {{}}
+        for name, plan in (
+                ("reference", WalkPlan(backend="reference", **kw)),
+                ("barrier", WalkPlan(backend="sharded", **kw)),
+                ("pipelined", WalkPlan(backend="sharded", pipeline=True,
+                                       **kw))):
+            runs[name] = WalkEngine.build(g, plan).run(
+                starts=starts, seed=5, walker_ids=wid)
+        for name in ("barrier", "pipelined"):
+            assert np.array_equal(runs["reference"].walks,
+                                  runs[name].walks), (per_shard, length,
+                                                      name)
+            assert runs[name].stats.dropped == 0
+        pip, bar = runs["pipelined"].stats, runs["barrier"].stats
+        if length >= 2:
+            assert pip.exposed_collective_bytes < pip.collective_bytes, pip
+            assert pip.overlap_efficiency > 0, pip
+            assert pip.exposed_collective_bytes < \\
+                bar.exposed_collective_bytes, (pip, bar)
+        assert bar.exposed_collective_bytes == bar.collective_bytes
+    print("OK")
+""")
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("mode", ["exact", "approx"])
+def test_pipelined_vs_barrier_parity(mode):
+    """Tentpole lockdown: double-buffered cohort pipeline == barrier ==
+    reference, bit-identical, under strict_drops — including odd per-shard
+    walker counts (shard-misaligned cohort splits) and length 2."""
+    _run_subprocess(PIPELINE_PARITY_SCRIPT.format(mode=mode))
+
+
+PIPELINE_DROPS_SCRIPT = textwrap.dedent("""
+    import os, warnings
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=2"
+    import numpy as np, jax
+    from repro.core import rmat
+    from repro.engine import WalkEngine, WalkPlan
+
+    g = rmat.skew(4, k=8, avg_degree=16, seed=3)
+    kw = dict(p=0.5, q=2.0, length=8, cap=24, capacity=1)  # starved
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore", RuntimeWarning)
+        bar = WalkEngine.build(g, WalkPlan(backend="sharded", **kw)).run(
+            seed=0)
+        pip = WalkEngine.build(g, WalkPlan(backend="sharded", pipeline=True,
+                                           **kw)).run(seed=0)
+    # capacity is per-destination *per exchange*; a cohort's request rank is
+    # <= its joint barrier rank, so pipelined drops form a subset of barrier
+    # drops at equal capacity
+    assert 0 < pip.stats.dropped <= bar.stats.dropped, (pip.stats,
+                                                        bar.stats)
+    assert pip.stats.exposed_collective_bytes < pip.stats.collective_bytes
+    print("OK", bar.stats.dropped, pip.stats.dropped)
+""")
+
+
+@pytest.mark.slow
+def test_pipelined_drops_bounded_by_barrier():
+    """Starved exchange: the pipeline never drops more than the barrier
+    loop at equal per-exchange capacity."""
+    _run_subprocess(PIPELINE_DROPS_SCRIPT)
+
+
 def test_rounds_stream_matches_individual_runs(small_graph):
     plan = WalkPlan(p=0.5, q=2.0, length=6, cap=16)
     eng = WalkEngine.build(small_graph, plan)

@@ -72,3 +72,43 @@ def test_traffic_swa_caps_score_term():
     per_full = t_full["attn_s2"] / 32
     per_swa = t_swa["attn_s2"] / 56
     assert per_swa < per_full * (4096 / 32768) * 3  # heads/batch factors
+
+def test_walk_overlap_model_barrier_fully_exposed():
+    m = traffic.walk_overlap_model(8, 64, 24, 20, walkers_per_shard=64,
+                                   pipeline=False)
+    assert m["exposed_bytes"] == m["total_bytes"] > 0
+    assert m["efficiency"] == 0.0
+
+
+def test_walk_overlap_model_pipeline_hides_bytes():
+    """Pipelined: only the prologue is structurally un-hidable, so exposed
+    bytes drop strictly below the barrier baseline and efficiency > 0 —
+    while per-superstep totals stay at the barrier level (two half-capacity
+    exchanges)."""
+    barrier = traffic.walk_overlap_model(8, 64, 24, 20, walkers_per_shard=64,
+                                         pipeline=False)
+    pipe = traffic.walk_overlap_model(8, 32, 24, 20, walkers_per_shard=64,
+                                      pipeline=True)
+    assert pipe["total_bytes"] == barrier["total_bytes"]
+    assert 0 < pipe["exposed_bytes"] < barrier["exposed_bytes"]
+    assert pipe["efficiency"] > 0
+    # more compute per cohort -> more hiding capacity -> less exposure
+    big = traffic.walk_overlap_model(8, 32, 24, 20, walkers_per_shard=4096,
+                                     pipeline=True)
+    assert big["exposed_bytes"] < pipe["exposed_bytes"]
+    assert big["efficiency"] > pipe["efficiency"]
+
+
+def test_walk_overlap_model_degenerate_cases():
+    # single shard / single step: nothing on the wire either way
+    for shards, length in ((1, 20), (8, 1)):
+        for pipeline in (False, True):
+            m = traffic.walk_overlap_model(shards, 32, 24, length,
+                                           walkers_per_shard=16,
+                                           pipeline=pipeline)
+            assert m == {"total_bytes": 0, "exposed_bytes": 0,
+                         "efficiency": 0.0}
+    # exposure never exceeds the wire total, even for tiny cohorts
+    m = traffic.walk_overlap_model(2, 1, 24, 2, walkers_per_shard=1,
+                                   pipeline=True)
+    assert 0 <= m["exposed_bytes"] <= m["total_bytes"]

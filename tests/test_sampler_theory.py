@@ -1,0 +1,129 @@
+"""Theory quality gate: node2vec stationary distribution (closed form).
+
+The node2vec walk is a 2nd-order Markov chain; lifted to the directed-edge
+state space (u, v) it is 1st-order with transition
+
+    T[(u, v), (v, x)] = alpha_pq(u, x) * w(v, x) / Z(u, v)
+
+(Meng & Masuda, "Analysis of node2vec random walks on networks", Proc. R.
+Soc. A 2020). On a small graph the stationary distribution over edges is
+computable exactly — power iteration over T built from the
+``brute_force_probs`` oracle — and the marginal node visit frequency
+``f(v) = sum_u pi(u, v)`` must match empirical visit counts from the walk
+engine within CI bounds. For p = q = 1 the chain drops to a plain weighted
+random walk whose stationary node law is strength-proportional
+(f(v) ∝ sum_x w(v, x)), giving an independent closed form.
+
+This gates the *sampler itself* (any backend would do — the parity battery
+pins the backends to each other; this pins them to the math).
+"""
+import numpy as np
+import pytest
+
+from repro.core.graph import CSRGraph
+from repro.core.transition import brute_force_probs
+from repro.engine import WalkEngine, WalkPlan
+
+# enough samples that 6-sigma CI bounds are tight but tolerant of the
+# autocorrelation of successive steps within one walk
+WALKERS = 128
+LENGTH = 200
+BURN = 60
+
+
+def weighted_cycle(n: int = 8) -> CSRGraph:
+    src = np.arange(n)
+    dst = (src + 1) % n
+    w = 1.0 + (src % 3).astype(np.float32)        # weights 1, 2, 3 repeating
+    return CSRGraph.from_edges(n, src, dst, w)
+
+
+def weighted_star(leaves: int = 6) -> CSRGraph:
+    src = np.zeros(leaves, np.int64)
+    dst = np.arange(1, leaves + 1)
+    w = np.linspace(1.0, 3.0, leaves).astype(np.float32)
+    return CSRGraph.from_edges(leaves + 1, src, dst, w)
+
+
+def edge_chain_stationary(g: CSRGraph, p: float, q: float):
+    """Exact stationary node visit frequencies via the directed-edge chain,
+    plus the chain's integrated autocorrelation time tau = (1+l2)/(1-l2)
+    (l2 = second-largest eigenvalue modulus of T) — the factor by which
+    correlated within-walk samples are discounted when forming CI bounds."""
+    edges = [(int(u), int(v)) for u in range(g.n) for v in g.neighbors(u)]
+    idx = {e: i for i, e in enumerate(edges)}
+    T = np.zeros((len(edges), len(edges)))
+    for (u, v), i in idx.items():
+        for x, prob in brute_force_probs(g, u, v, p, q).items():
+            T[i, idx[(v, x)]] = prob
+    assert np.allclose(T.sum(axis=1), 1.0)
+    pi = np.full(len(edges), 1.0 / len(edges))
+    for _ in range(5000):
+        nxt = pi @ T
+        if np.abs(nxt - pi).sum() < 1e-12:
+            pi = nxt
+            break
+        pi = nxt
+    f = np.zeros(g.n)
+    for (u, v), i in idx.items():
+        f[v] += pi[i]
+    lam = np.sort(np.abs(np.linalg.eigvals(T)))[::-1]
+    l2 = min(float(lam[1]), 0.995)
+    tau = max((1.0 + l2) / (1.0 - l2), 1.0)
+    return f / f.sum(), tau
+
+
+def empirical_visits(g: CSRGraph, p: float, q: float, seed: int) -> np.ndarray:
+    plan = WalkPlan(p=p, q=q, length=LENGTH, backend="reference")
+    eng = WalkEngine.build(g, plan)
+    starts = (np.arange(WALKERS) % g.n).astype(np.int32)
+    walks = eng.run(starts=starts, seed=seed,
+                    walker_ids=np.arange(WALKERS, dtype=np.int32)).walks
+    tail = np.asarray(walks)[:, BURN:]
+    counts = np.bincount(tail.ravel(), minlength=g.n).astype(np.float64)
+    return counts / counts.sum(), tail.size
+
+
+def assert_within_ci(emp, theory, n_samples, tau, label):
+    # successive steps of one walk are correlated with integrated
+    # autocorrelation time tau; the WALKERS chains are independent, so the
+    # effective sample count is walkers * (per-walk samples / tau)
+    per_walk = n_samples / WALKERS
+    n_eff = WALKERS * max(per_walk / tau, 1.0)
+    sigma = np.sqrt(theory * (1.0 - theory) / n_eff)
+    err = np.abs(emp - theory)
+    assert (err <= 6.0 * sigma + 2.0 / n_eff).all(), (
+        label, emp, theory, err / np.maximum(sigma, 1e-12))
+    tv = 0.5 * err.sum()
+    assert tv < max(2.0 * sigma.sum(), 0.02), (label, tv, sigma.sum())
+
+
+@pytest.mark.parametrize("p,q", [(1.0, 1.0), (0.25, 4.0), (4.0, 0.25),
+                                 (2.0, 0.5)])
+def test_cycle_stationary_distribution(p, q):
+    g = weighted_cycle()
+    theory, tau = edge_chain_stationary(g, p, q)
+    emp, n = empirical_visits(g, p, q, seed=17)
+    assert_within_ci(emp, theory, n, tau, f"cycle p={p} q={q}")
+
+
+@pytest.mark.parametrize("p,q", [(1.0, 1.0), (0.5, 2.0)])
+def test_star_stationary_distribution(p, q):
+    g = weighted_star()
+    theory, tau = edge_chain_stationary(g, p, q)
+    emp, n = empirical_visits(g, p, q, seed=23)
+    assert_within_ci(emp, theory, n, tau, f"star p={p} q={q}")
+
+
+@pytest.mark.parametrize("make", [weighted_cycle, weighted_star])
+def test_pq1_reduces_to_strength_proportional(make):
+    """p = q = 1: the edge chain's node marginal must equal the classical
+    strength-proportional law — an independent closed form the chain
+    construction itself is checked against."""
+    g = make()
+    strength = np.array([g.weights(v).sum() for v in range(g.n)], np.float64)
+    closed_form = strength / strength.sum()
+    chain, tau = edge_chain_stationary(g, 1.0, 1.0)
+    assert np.allclose(chain, closed_form, atol=1e-9)
+    emp, n = empirical_visits(g, 1.0, 1.0, seed=31)
+    assert_within_ci(emp, closed_form, n, tau, f"pq1 {make.__name__}")
