@@ -1,4 +1,4 @@
-.PHONY: ci fast smoke lint bench bench-smoke bench-baseline
+.PHONY: ci fast smoke lint serve-smoke bench bench-smoke bench-baseline
 
 ci:            ## tier-1: full test suite (the per-PR bar; nightly in CI)
 	scripts/ci.sh tier1
@@ -11,6 +11,9 @@ smoke:         ## per-push gate: lint + import + collect + fast unit subset
 
 lint:          ## forbidden-API checks only (jax-0.4.37 quirks)
 	scripts/ci.sh lint
+
+serve-smoke:   ## serving end-to-end + gated serve_* ratios vs baseline
+	scripts/ci.sh serve-smoke
 
 bench:         ## run the benchmark battery (CSV rows to stdout)
 	PYTHONPATH=src python -m benchmarks.run

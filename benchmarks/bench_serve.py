@@ -1,0 +1,179 @@
+"""Serving-layer benchmark: synthetic Zipf traffic through EmbeddingService.
+
+Battery mode (``run()``, wired into ``benchmarks.run``) prints the usual
+``name,us_per_call,derived`` CSV rows: per-request service time across Zipf
+exponents (hotter traffic -> higher hit rate -> faster), plus the
+batched-vs-single-request gather ratio.
+
+Smoke mode (``--smoke [out.json]``) emits **ratio / deterministic** metrics
+into the ``BENCH_smoke.json`` schema (merging with an existing file so the
+walk metrics survive), gated by ``scripts/bench_compare.py --strict``:
+
+* ``serve_hit_rate_zipf``       — cache hit rate of a fixed virtual-clock
+                                  Zipf replay (policy-deterministic: same
+                                  trace + same admission = same number).
+* ``serve_occupancy_zipf``      — mean batch occupancy of that replay
+                                  (deterministic for the same reason).
+* ``serve_expired_share_starved`` — share of requests shed when the queue
+                                  is starved past every deadline
+                                  (deterministic).
+* ``serve_compile_shapes_per_bucket`` — distinct jit shapes / available
+                                  buckets after the replay; > its baseline
+                                  means a per-request-recompile regression.
+* ``serve_batched_over_single_us`` — wall-time ratio of one 128-wide batched
+                                  gather vs 128 single gathers (interleaved
+                                  timing; machine load cancels).
+"""
+from __future__ import annotations
+
+import json
+import sys
+
+import numpy as np
+
+from benchmarks.common import graph, row, time_fn
+from repro.engine import WalkPlan
+from repro.serve import EmbeddingService, VirtualClock, synthetic_trace
+
+SPEC = "skew:s=4,k=9,deg=20,seed=3,relabel=degree"
+CAP = 24
+DIM = 64
+REQUESTS = 2000
+K = 8
+
+
+def _embeddings(n: int, dim: int = DIM, seed: int = 0) -> np.ndarray:
+    """Deterministic stand-in SGNS table (the bench measures serving, not
+    embedding quality; unit rows keep dot products bounded)."""
+    emb = np.random.default_rng(seed).normal(size=(n, dim)).astype(np.float32)
+    return emb / np.linalg.norm(emb, axis=1, keepdims=True)
+
+
+def _service(g, clock=None, cache_size: int = 256) -> EmbeddingService:
+    return EmbeddingService(
+        g, _embeddings(g.n), plan=WalkPlan(backend="reference", cap=CAP),
+        cache_size=cache_size, linger_s=1e-4, margin_s=1e-4,
+        **({"clock": clock} if clock is not None else {}))
+
+
+def _replay(svc: EmbeddingService, clock: VirtualClock, alpha: float,
+            num: int = REQUESTS, deadline_s: float = 0.05) -> int:
+    trace = synthetic_trace(svc.graph.n, num, alpha=alpha, qps=10_000.0,
+                            deadline_s=deadline_s, seed=0)
+    lost = 0
+    for ev in trace:
+        clock.t = ev.t_arrival
+        svc.submit(ev.kind, ev.node, k=K, deadline_s=ev.deadline_s,
+                   now=clock())
+        svc.pump(now=clock())
+    svc.drain(now=clock() + 1.0)
+    st = svc.stats()
+    lost = num - st.requests - st.expired
+    assert lost == 0, f"lost {lost} responses"
+    return st.requests
+
+
+def run() -> None:
+    g = graph(SPEC)
+    for alpha in (0.8, 1.1, 1.4):
+        clock = VirtualClock()
+        svc = _service(g, clock=clock)
+        import time as _time
+        t0 = _time.perf_counter()
+        _replay(svc, clock, alpha)
+        us = (_time.perf_counter() - t0) / REQUESTS * 1e6
+        st = svc.stats()
+        row(f"serve_zipf{alpha:g}", us,
+            f"hit_rate={st.cache_hit_rate:.3f};"
+            f"occupancy={st.batch_occupancy:.3f};expired={st.expired}")
+
+    svc = _service(g)
+    nodes = np.arange(128, dtype=np.int32)
+    us_batch = time_fn(lambda: svc.embed(nodes), warmup=1, iters=5)
+    us_single = time_fn(
+        lambda: [svc.embed(int(v)) for v in nodes[:16]], warmup=1, iters=5)
+    us_single *= 128 / 16          # per-128 equivalent
+    row("serve_embed_batch128", us_batch,
+        f"single_equiv_us={us_single:.0f};"
+        f"batch_speedup={us_single / us_batch:.1f}x")
+
+
+def smoke_metrics(info: dict) -> dict:
+    """The ratio metrics described in the module docstring."""
+    g = graph(SPEC)
+
+    clock = VirtualClock()
+    svc = _service(g, clock=clock)
+    _replay(svc, clock, alpha=1.2)
+    st = svc.stats()
+    buckets = len(svc.batcher.buckets)
+    groups = {s[0] for s in svc.compiled_shapes}
+    info["serve_requests"] = st.requests
+    info["serve_batches"] = st.batches
+    metrics = {
+        "serve_hit_rate_zipf": st.cache_hit_rate,
+        "serve_occupancy_zipf": st.batch_occupancy,
+        "serve_compile_shapes_per_bucket":
+            len(svc.compiled_shapes) / (buckets * max(len(groups), 1)),
+    }
+
+    # starved queue: after a warm pass fills the cache, stall the pump until
+    # every deadline is long gone — hits were answered at submit and
+    # survive; everything that had to queue is shed. The resulting share is
+    # a deterministic joint property of the admission policy and the shed
+    # path (1.0 would mean the cache stopped answering, 0.0 that expiry
+    # stopped shedding).
+    from repro.serve import StatsRecorder
+    clock = VirtualClock()
+    svc = _service(g, clock=clock)
+    _replay(svc, clock, alpha=1.2, num=512)          # warm the cache
+    svc.recorder = StatsRecorder()                   # fresh stats window
+    trace = synthetic_trace(g.n, 256, alpha=1.2, qps=10_000.0,
+                            deadline_s=1e-3, seed=1)
+    t0 = clock.t
+    for ev in trace:
+        clock.t = t0 + ev.t_arrival
+        svc.submit(ev.kind, ev.node, k=K, deadline_s=ev.deadline_s,
+                   now=clock())
+    clock.advance(10.0)
+    svc.drain(now=clock())
+    st = svc.stats()
+    metrics["serve_expired_share_starved"] = st.expired / 256
+
+    svc = _service(g)
+    nodes = np.arange(128, dtype=np.int32)
+    us_batch = time_fn(lambda: svc.embed(nodes), warmup=1, iters=5)
+    us_single = time_fn(
+        lambda: [svc.embed(int(v)) for v in nodes[:16]], warmup=1, iters=5
+    ) * (128 / 16)
+    info["serve_embed_batch128_us"] = us_batch
+    info["serve_embed_single128_equiv_us"] = us_single
+    metrics["serve_batched_over_single_us"] = us_batch / us_single
+    return metrics
+
+
+def run_smoke(out_path: str = "BENCH_smoke.json") -> dict:
+    """Merge serve metrics into ``out_path`` (existing walk metrics, if the
+    file is already there, are preserved)."""
+    try:
+        with open(out_path) as f:
+            doc = json.load(f)
+    except FileNotFoundError:
+        doc = {"version": 1, "metrics": {}, "info": {}}
+    info = doc.setdefault("info", {})
+    metrics = smoke_metrics(info)
+    doc.setdefault("metrics", {}).update(metrics)
+    with open(out_path, "w") as f:
+        json.dump(doc, f, indent=2, sort_keys=True)
+    for k in sorted(metrics):
+        print(f"{k} = {metrics[k]:.4g}")
+    print(f"wrote {out_path}")
+    return doc
+
+
+if __name__ == "__main__":
+    if "--smoke" in sys.argv:
+        args = [a for a in sys.argv[1:] if a != "--smoke"]
+        run_smoke(args[0] if args else "BENCH_smoke.json")
+    else:
+        run()

@@ -9,8 +9,8 @@ import traceback
 def main() -> None:
     from benchmarks import (bench_accuracy, bench_breakdown,
                             bench_efficiency, bench_growth, bench_memory,
-                            bench_scaling, bench_skew, bench_wec,
-                            roofline_table)
+                            bench_scaling, bench_serve, bench_skew,
+                            bench_wec, roofline_table)
     print("name,us_per_call,derived")
     suites = [
         ("breakdown (Fig.1)", bench_breakdown),
@@ -21,6 +21,7 @@ def main() -> None:
         ("WeC-K (Fig.10/11)", bench_wec),
         ("Skew-S (Fig.5/12/13/14)", bench_skew),
         ("accuracy (Fig.6)", bench_accuracy),
+        ("serving (DESIGN §13)", bench_serve),
         ("roofline table (dry-run)", roofline_table),
     ]
     failed = []

@@ -20,10 +20,14 @@ import json
 import sys
 
 
-def compare(new: dict, base: dict, threshold: float) -> list[str]:
+def compare(new: dict, base: dict, threshold: float,
+            only: str = "") -> list[str]:
     warnings = []
     new_m = new.get("metrics", {})
     base_m = base.get("metrics", {})
+    if only:
+        new_m = {k: v for k, v in new_m.items() if k.startswith(only)}
+        base_m = {k: v for k, v in base_m.items() if k.startswith(only)}
     for key in sorted(base_m):
         old = base_m[key]
         if key not in new_m:
@@ -54,12 +58,16 @@ def main() -> int:
                     help="max allowed drift ratio in either direction")
     ap.add_argument("--strict", action="store_true",
                     help="exit 1 on any regression (default: warn only)")
+    ap.add_argument("--only", default="",
+                    help="compare only metrics whose name starts with this "
+                         "prefix (e.g. serve_) — lets a partial emitter "
+                         "gate its own keys without WARNing on the rest")
     args = ap.parse_args()
     with open(args.new) as f:
         new = json.load(f)
     with open(args.baseline) as f:
         base = json.load(f)
-    warnings = compare(new, base, args.threshold)
+    warnings = compare(new, base, args.threshold, only=args.only)
     if warnings:
         print(f"{len(warnings)} metric(s) drifted > {args.threshold}x",
               file=sys.stderr)

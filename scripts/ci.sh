@@ -1,5 +1,5 @@
 #!/usr/bin/env bash
-# Tiered CI entry point. Usage: scripts/ci.sh [tier1|fast|smoke|lint]
+# Tiered CI entry point. Usage: scripts/ci.sh [tier1|fast|smoke|lint|serve-smoke]
 #   tier1 (default) — the full suite, the bar every PR must hold.
 #                     Runtime varies 8 min - 2.5 h with machine load, so it
 #                     runs nightly / on demand, NOT per push.
@@ -7,6 +7,9 @@
 #   smoke           — the per-push gate: forbidden-API lint, import check,
 #                     collect-only, then a fast unit subset (minutes)
 #   lint            — just the forbidden-API checks (jax-0.4.37 quirks)
+#   serve-smoke     — serving end-to-end: serve_graph --smoke replays a Zipf
+#                     trace, then bench_serve --smoke gates the serve_*
+#                     ratios against the committed baseline
 set -euo pipefail
 cd "$(dirname "$0")/.."
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
@@ -62,13 +65,22 @@ case "$target" in
     lint
     echo "smoke: import check"
     python -c "import repro.engine, repro.data.ingest, repro.core.graph, \
-repro.core.walk_distributed, repro.roofline.analysis; print('imports OK')"
+repro.core.walk_distributed, repro.roofline.analysis, repro.serve; \
+print('imports OK')"
     echo "smoke: collect-only"
     python -m pytest -q --collect-only >/dev/null
     echo "smoke: fast unit subset"
     exec python -m pytest -x -q -m "not slow" --durations=10 \
       "${SMOKE_TESTS[@]}"
     ;;
-  *) echo "unknown target: $target (want tier1|fast|smoke|lint)" >&2
+  serve-smoke)
+    echo "serve-smoke: end-to-end Zipf trace through the embedding service"
+    python -m repro.launch.serve_graph --smoke
+    echo "serve-smoke: deterministic serve_* ratios vs baseline"
+    python -m benchmarks.bench_serve --smoke BENCH_smoke.json
+    exec python scripts/bench_compare.py BENCH_smoke.json \
+      benchmarks/baselines/BENCH_smoke.json --strict --only serve_
+    ;;
+  *) echo "unknown target: $target (want tier1|fast|smoke|lint|serve-smoke)" >&2
      exit 2 ;;
 esac

@@ -79,3 +79,11 @@ def train_step(params, opt_state, batch, opt: Optimizer):
 def normalize_embeddings(params) -> jnp.ndarray:
     e = params["emb_in"].astype(jnp.float32)
     return e / (jnp.linalg.norm(e, axis=-1, keepdims=True) + 1e-8)
+
+
+def serving_table(params) -> np.ndarray:
+    """The train->serve handoff: host f32 unit-norm ``[V, D]`` table in the
+    layout ``repro.serve.EmbeddingService`` holds resident. One call site
+    owns the normalization convention, so trainer and server cannot drift
+    (the service also accepts a raw SGNS params dict and calls this)."""
+    return np.asarray(jax.device_get(normalize_embeddings(params)))

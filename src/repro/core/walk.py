@@ -65,6 +65,28 @@ def walker_key(seed_key: jax.Array, walker_id: jnp.ndarray,
     return jax.random.fold_in(jax.random.fold_in(seed_key, walker_id), step)
 
 
+_DEPRECATION_WARNED: set = set()
+
+
+def warn_deprecated_once(name: str, plan_hint: str) -> None:
+    """One-shot ``DeprecationWarning`` for the legacy shims. They sit on
+    loops (FN-Multi rounds, subprocess parity tests), where one warning per
+    process is actionable and one per call is noise."""
+    if name in _DEPRECATION_WARNED:
+        return
+    _DEPRECATION_WARNED.add(name)
+    warnings.warn(
+        f"{name} is deprecated; build the walk through "
+        f"repro.engine.WalkEngine.build(graph, WalkPlan({plan_hint})) "
+        f"(this warning fires once per process)",
+        DeprecationWarning, stacklevel=3)
+
+
+def reset_deprecation_warnings() -> None:
+    """Re-arm the one-shot shim warnings (test isolation)."""
+    _DEPRECATION_WARNED.clear()
+
+
 def unified_row(pg: PaddedGraph, v: jnp.ndarray):
     """Full-width (max(cap, hot_cap)) row lookup for one vertex id.
 
@@ -184,9 +206,7 @@ def simulate_walks(pg: PaddedGraph, starts: jnp.ndarray, seed: int,
     Returns [W, length] i32: the sampled steps (excluding the start vertex,
     matching Algorithm 1 which stores step[0] = first sampled move).
     """
-    warnings.warn(
-        "simulate_walks is deprecated; use repro.engine.WalkEngine "
-        "(WalkPlan(backend='reference'))", DeprecationWarning, stacklevel=2)
+    warn_deprecated_once("simulate_walks", "backend='reference'")
     starts = jnp.asarray(starts, jnp.int32)
     if walker_ids is None:
         walker_ids = jnp.arange(starts.shape[0], dtype=jnp.int32)

@@ -61,7 +61,6 @@ from __future__ import annotations
 import dataclasses
 import functools
 import inspect
-import warnings
 from typing import Optional, Tuple
 
 import jax
@@ -70,7 +69,7 @@ import numpy as np
 from jax.sharding import Mesh, PartitionSpec as P
 
 from repro.core.graph import PAD_ID, PaddedGraph
-from repro.core.walk import WalkParams, walker_key
+from repro.core.walk import WalkParams, walker_key, warn_deprecated_once
 from repro.engine.sampler import HotContext, Sampler, first_order_slots
 
 RW_AXIS = "rw"
@@ -580,9 +579,7 @@ def distributed_walks(pg: PaddedGraph, mesh: Mesh, seed: int,
     (walks [W, length] i32, dropped_request_count). The walk rows for
     padding vertices (id >= pg.n) are self-loops and should be ignored.
     """
-    warnings.warn(
-        "distributed_walks is deprecated; use repro.engine.WalkEngine "
-        "(WalkPlan(backend='sharded'))", DeprecationWarning, stacklevel=2)
+    warn_deprecated_once("distributed_walks", "backend='sharded'")
     num_shards = int(np.prod([mesh.shape[a] for a in mesh.axis_names]))
     g = ShardedGraph.build(pg, num_shards)
     if starts is None:

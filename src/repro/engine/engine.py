@@ -32,7 +32,8 @@ from repro.core.walk_distributed import (ShardedGraph, make_distributed_walk)
 from repro.engine.plan import WalkPlan, WalkResult, WalkStats
 from repro.launch.mesh import make_rw_mesh
 from repro.roofline import analysis as roof
-from repro.roofline.traffic import walk_collective_bytes, walk_overlap_model
+from repro.roofline.traffic import (walk_auto_capacity,
+                                    walk_collective_bytes, walk_overlap_model)
 
 
 def round_seed(seed: int, r: int) -> int:
@@ -105,12 +106,23 @@ class WalkEngine:
         # zero-drop default halves too — total bytes per superstep stay at
         # the barrier level while each exchange hides behind the other
         # cohort's compute.
-        if plan.capacity is not None:
+        per_cohort = (sg.n_local + 1) // 2 if plan.pipeline else sg.n_local
+        if plan.capacity == "auto":
+            # derive from the cold degree mass: hot vertices are replicated
+            # and never consume slots, so on skewed graphs the expected
+            # per-destination demand is far below the worst case.
+            if isinstance(sg.deg, jax.ShapeDtypeStruct):
+                raise ValueError(
+                    "capacity='auto' needs the concrete degree array; an "
+                    "abstract ShardedGraph (analyze-only) must pass an "
+                    "explicit capacity")
+            capacity = walk_auto_capacity(
+                np.asarray(sg.deg[:sg.n_orig]), cap=sg.cap,
+                num_shards=sg.num_shards, walkers_per_shard=per_cohort)
+        elif plan.capacity is not None:
             capacity = plan.capacity
-        elif plan.pipeline:
-            capacity = (sg.n_local + 1) // 2
         else:
-            capacity = sg.n_local
+            capacity = per_cohort
         fn = make_distributed_walk(sg, rw, plan.params(), capacity,
                                    length=plan.length,
                                    pipeline=plan.pipeline)

@@ -35,9 +35,14 @@ class WalkPlan:
     backend: str = "reference"        # reference | sharded | fused
     cap: Optional[int] = None         # cold row width (None -> FN-Base)
     hot_cap: Optional[int] = None     # hot row width (None -> max hot degree)
-    capacity: Optional[int] = None    # sharded: request slots per destination
-                                      # *per exchange* (pipelined mode runs
-                                      # two half-size exchanges per superstep)
+    capacity: Optional[object] = None  # sharded: request slots per
+                                      # destination *per exchange* (pipelined
+                                      # mode runs two half-size exchanges per
+                                      # superstep). int, None (zero-drop
+                                      # worst case), or "auto" (derived from
+                                      # the cold degree mass —
+                                      # ``roofline.traffic.
+                                      # walk_auto_capacity``)
     strict_drops: bool = False        # raise (not warn) when requests drop
     pipeline: bool = False            # async superstep pipeline (DESIGN §12):
                                       # sharded -> double-buffered cohort
@@ -53,6 +58,13 @@ class WalkPlan:
                 f"backend must be one of {BACKENDS}, got {self.backend!r}")
         if self.length < 1:
             raise ValueError(f"length must be >= 1, got {self.length}")
+        cap = self.capacity
+        ok = cap is None or cap == "auto" or \
+            (isinstance(cap, (int, np.integer)) and cap >= 1)
+        if not ok:
+            raise ValueError(
+                f"capacity must be None, 'auto', or a positive int, "
+                f"got {cap!r}")
 
     def params(self):
         """Legacy ``WalkParams`` view (for the deprecated shims)."""

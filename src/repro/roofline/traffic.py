@@ -52,6 +52,44 @@ def walk_collective_bytes(num_shards: int, capacity: int, cap: int,
     return per_step * max(length - 1, 0)
 
 
+def walk_auto_capacity(deg, cap: Optional[int], num_shards: int,
+                       walkers_per_shard: int, safety: float = 4.0,
+                       floor: int = 8) -> int:
+    """Derive a per-destination NEIG exchange capacity from the degree
+    distribution (``WalkPlan.capacity="auto"``).
+
+    Only *cold remote* vertices consume request slots: hot vertices are
+    replicated everywhere (FN-Cache) and local vertices are read directly,
+    so the zero-drop worst case — every walker asking the same destination,
+    i.e. ``capacity = walkers_per_shard`` — is wildly pessimistic on skewed
+    graphs, where most steps land on the (replicated) hot set. The walk's
+    stationary visit probability of a vertex is proportional to its degree
+    (undirected weighted chain), so the expected share of walkers standing
+    on a cold vertex each step is the cold degree mass::
+
+        cold_share = sum(deg[deg <= cap]) / sum(deg)
+
+    and with hash-partitioned cold mass spread over ``num_shards``
+    destinations, the expected per-destination demand per exchange is
+    ``walkers_per_shard * cold_share / num_shards``. A ``safety`` multiplier
+    (default 4x) covers burstiness; ``floor`` covers tiny shards. The result
+    is clipped to ``walkers_per_shard`` (never worse than the zero-drop
+    default). With ``cap=None`` (FN-Base: no hot set) every non-local step
+    is a request, so cold_share is 1 and only the 1/num_shards spreading
+    applies.
+    """
+    import numpy as np
+    deg = np.asarray(deg, np.float64)
+    total = deg.sum()
+    if total <= 0 or num_shards < 1:
+        return max(min(floor, walkers_per_shard), 1)
+    cold_share = deg[deg <= cap].sum() / total if cap is not None else 1.0
+    expected = walkers_per_shard * cold_share / num_shards
+    auto = int(np.ceil(safety * expected))
+    auto = max(auto, min(floor, walkers_per_shard), 1)
+    return min(auto, walkers_per_shard)
+
+
 def walk_step_flops(walkers: int, width: int) -> float:
     """Analytic per-device sampling FLOPs for one superstep over ``walkers``
     walkers with candidate rows of ``width`` lanes.

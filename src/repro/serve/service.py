@@ -1,0 +1,314 @@
+"""EmbeddingService — online node-embedding queries over a resident graph +
+trained SGNS table (DESIGN.md §13).
+
+The walk engine turns a graph into embeddings; this is the layer that turns
+those embeddings into answers under traffic — the "millions of users"
+serving story (ROADMAP; Tencent's recommendation workload in PAPERS.md).
+One service instance holds, resident on device:
+
+* the FN-Cache graph layout (``PaddedGraph``: capped cold rows + replicated
+  hot rows) — the same arrays the walk engine samples from;
+* the L2-normalized SGNS ``emb`` table ``[V, D]``.
+
+Two query kinds:
+
+* ``embed(nodes, window=0)`` — gather rows; with ``window > 0`` the result
+  is the normalized mean of the node's row and a ``window``-step node2vec
+  walk context from it (the query-time analogue of the training-time
+  context window). Walks run through the resident ``WalkEngine`` with
+  walker id == node id, so a node's walk context — and therefore its
+  embedding — is a pure function of (node, service seed), independent of
+  batch composition. That is what makes coalesced serving bit-identical to
+  per-request serving (tested).
+* ``rank_neighbors(node, k)`` — top-k dot-product ranking of a candidate
+  set: the node's graph neighbors (default) or the full vocabulary
+  (``scope="all"``).
+
+The request path is ``submit() -> pump()`` through a
+:class:`~repro.serve.batcher.DeadlineBatcher` (fixed-shape jit buckets, no
+per-request recompiles) with a :class:`~repro.serve.cache.ResultCache` in
+front (LRU, hot-set admission). ``stats()`` snapshots the
+:class:`~repro.serve.stats.ServeStats` window.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+import math
+import time
+from typing import Dict, List, Optional, Sequence, Tuple, Union
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.graph import CSRGraph, PaddedGraph
+from repro.engine import WalkEngine, WalkPlan
+from repro.serve.batcher import (DEFAULT_BUCKETS, DeadlineBatcher, Response,
+                                 bucket_for)
+from repro.serve.cache import (Admission, ResultCache, hot_set_admission,
+                               prefix_admission)
+from repro.serve.stats import ServeStats, StatsRecorder
+
+
+# ------------------------------------------------------------------ kernels
+# Module-level jit'd kernels: compilation is cached per (shape, static
+# args), and the batcher only ever presents bucket shapes, so the compile
+# set is bounded by buckets x query groups (asserted in tests).
+
+@jax.jit
+def _gather_kernel(emb: jnp.ndarray, nodes: jnp.ndarray) -> jnp.ndarray:
+    return emb[nodes]
+
+
+@jax.jit
+def _walk_avg_kernel(emb: jnp.ndarray, nodes: jnp.ndarray,
+                     walks: jnp.ndarray) -> jnp.ndarray:
+    ctx = emb[walks]                                  # [B, window, D]
+    mean = (emb[nodes] + jnp.sum(ctx, axis=1)) / (walks.shape[1] + 1)
+    return mean / (jnp.linalg.norm(mean, axis=-1, keepdims=True) + 1e-8)
+
+
+@functools.partial(jax.jit, static_argnames=("k",))
+def _rank_neighbors_kernel(emb: jnp.ndarray, nodes: jnp.ndarray,
+                           cand: jnp.ndarray, k: int):
+    q = emb[nodes]                                    # [B, D]
+    valid = cand >= 0
+    ce = emb[jnp.clip(cand, 0, emb.shape[0] - 1)]     # [B, W, D]
+    scores = jnp.where(valid, jnp.einsum("bd,bwd->bw", q, ce), -jnp.inf)
+    if k > scores.shape[1]:                           # static widths
+        fill = ((scores.shape[0], k - scores.shape[1]))
+        scores = jnp.concatenate(
+            [scores, jnp.full(fill, -jnp.inf, scores.dtype)], axis=1)
+        cand = jnp.concatenate(
+            [cand, jnp.full(fill, -1, cand.dtype)], axis=1)
+    top_s, top_i = jax.lax.top_k(scores, k)
+    top_ids = jnp.take_along_axis(cand, top_i, axis=1)
+    return jnp.where(jnp.isfinite(top_s), top_ids, -1), top_s
+
+
+@functools.partial(jax.jit, static_argnames=("k",))
+def _rank_all_kernel(emb: jnp.ndarray, nodes: jnp.ndarray, k: int):
+    scores = emb[nodes] @ emb.T                       # [B, V]
+    scores = scores.at[jnp.arange(nodes.shape[0]), nodes].set(-jnp.inf)
+    return jax.lax.top_k(scores, k)
+
+
+class EmbeddingService:
+    """Resident-state serving over one graph + one embedding table."""
+
+    def __init__(self, graph: CSRGraph, emb, *,
+                 plan: Optional[WalkPlan] = None,
+                 cache_size: int = 1024,
+                 admission: Union[str, Admission, None] = "hot",
+                 buckets: Sequence[int] = DEFAULT_BUCKETS,
+                 linger_s: float = 0.0, margin_s: float = 0.0,
+                 walk_seed: int = 0, clock=time.monotonic) -> None:
+        if isinstance(graph, str):
+            from repro.data.ingest import load_graph
+            graph = load_graph(graph)
+        self.graph = graph
+        self.plan = plan or WalkPlan(backend="reference")
+        if self.plan.backend == "sharded" and jax.device_count() > 1:
+            raise ValueError(
+                "EmbeddingService serves from one replica; per-query walk "
+                "windows need walker-aligned starts, which the multi-shard "
+                "backend cannot give arbitrary query nodes. Hold one "
+                "PaddedGraph per serving replica (backend='reference' or "
+                "'fused') and shard *traffic*, not the graph.")
+        if isinstance(emb, dict):            # raw SGNS params pytree
+            from repro.core.skipgram import serving_table
+            emb = serving_table(emb)
+        emb = np.asarray(jax.device_get(emb), np.float32)
+        if emb.ndim != 2 or emb.shape[0] < graph.n:
+            raise ValueError(
+                f"emb must be [V >= n, D], got {emb.shape} for n={graph.n}")
+        self.emb = jnp.asarray(emb)
+        self.dim = int(emb.shape[1])
+        # resident FN-Cache layout, shared by every per-window walk engine
+        self._pg = PaddedGraph.build(graph, cap=self.plan.cap,
+                                     hot_cap=self.plan.hot_cap)
+        self._engines: Dict[int, WalkEngine] = {}
+        self._cand_width = max(graph.max_degree, 1)
+        if admission == "hot":
+            # FN-Cache hot set when the layout has one; else the same idea
+            # via degree rank (top cache_size vertices by degree)
+            if self.plan.cap is not None:
+                admission = hot_set_admission(graph.deg, self.plan.cap)
+            else:
+                order = np.argsort(-graph.deg.astype(np.int64),
+                                   kind="stable")
+                hot = np.zeros(graph.n, bool)
+                hot[order[:cache_size]] = True
+                admission = lambda v: bool(0 <= v < graph.n and hot[v])
+        elif isinstance(admission, str) and admission.startswith("prefix:"):
+            admission = prefix_admission(int(admission.split(":", 1)[1]))
+        self.cache = ResultCache(cache_size, admit=admission)
+        self.batcher = DeadlineBatcher(tuple(buckets), linger_s=linger_s,
+                                       margin_s=margin_s)
+        self.recorder = StatsRecorder()
+        self.walk_seed = walk_seed
+        self.clock = clock
+        self._ready: List[Response] = []
+        self.compiled_shapes: set = set()
+
+    # ------------------------------------------------------------- build --
+    @classmethod
+    def from_node2vec(cls, graph, cfg, mesh=None, **kw) -> "EmbeddingService":
+        """Run the full pipeline (walks -> SGNS) and serve the result."""
+        from repro.core.node2vec import node2vec
+        if isinstance(graph, str):
+            from repro.data.ingest import load_graph
+            graph = load_graph(graph)
+        emb = node2vec(graph, cfg, mesh=mesh)
+        plan = kw.pop("plan", None) or dataclasses.replace(
+            cfg.plan(mesh), backend="reference")
+        return cls(graph, emb, plan=plan, **kw)
+
+    def _engine_for(self, window: int) -> WalkEngine:
+        eng = self._engines.get(window)
+        if eng is None:
+            plan = dataclasses.replace(self.plan, length=window)
+            eng = WalkEngine.build(self._pg, plan)
+            self._engines[window] = eng
+        return eng
+
+    # ----------------------------------------------------- direct queries --
+    def _pad(self, nodes: np.ndarray) -> Tuple[np.ndarray, int]:
+        b = bucket_for(len(nodes), self.batcher.buckets)
+        padded = np.zeros(b, np.int32)
+        padded[:len(nodes)] = nodes
+        return padded, b
+
+    def embed(self, nodes, window: int = 0) -> np.ndarray:
+        """[B, D] embeddings for ``nodes`` — direct (cache/queue-bypassing)
+        batched path; the queued path computes through this same code, so
+        the two are bit-identical by construction."""
+        nodes = np.atleast_1d(np.asarray(nodes, np.int32))
+        padded, b = self._pad(nodes)
+        jnodes = jnp.asarray(padded)
+        if window <= 0:
+            self.compiled_shapes.add(("gather", b))
+            out = _gather_kernel(self.emb, jnodes)
+        else:
+            res = self._engine_for(window).run(
+                starts=padded, seed=self.walk_seed, walker_ids=padded)
+            self.compiled_shapes.add(("walk_avg", b, window))
+            out = _walk_avg_kernel(self.emb, jnodes,
+                                   jnp.asarray(res.walks, jnp.int32))
+        return np.asarray(out)[:len(nodes)]
+
+    def _neighbor_rows(self, nodes: np.ndarray) -> np.ndarray:
+        rows = np.full((len(nodes), self._cand_width), -1, np.int32)
+        for i, v in enumerate(nodes):
+            nb = self.graph.neighbors(int(v))
+            rows[i, :len(nb)] = nb
+        return rows
+
+    def rank_neighbors(self, nodes, k: int,
+                       scope: str = "neighbors"
+                       ) -> Tuple[np.ndarray, np.ndarray]:
+        """Top-``k`` candidates by dot product for each query node:
+        ``(ids [B, k], scores [B, k])``; ids are -1 past the candidate count.
+        ``scope="neighbors"`` ranks the node's graph neighborhood (the
+        recommender re-ranking shape); ``"all"`` scans the full table."""
+        if scope not in ("neighbors", "all"):
+            raise ValueError(f"scope must be neighbors|all, got {scope!r}")
+        nodes = np.atleast_1d(np.asarray(nodes, np.int32))
+        padded, b = self._pad(nodes)
+        jnodes = jnp.asarray(padded)
+        if scope == "all":
+            self.compiled_shapes.add(("rank_all", b, k))
+            top_s, top_i = _rank_all_kernel(self.emb, jnodes, k)
+            ids, scores = np.asarray(top_i), np.asarray(top_s)
+        else:
+            cand = self._neighbor_rows(padded)
+            self.compiled_shapes.add(("rank", b, k))
+            top_i, top_s = _rank_neighbors_kernel(
+                self.emb, jnodes, jnp.asarray(cand), k)
+            ids, scores = np.asarray(top_i), np.asarray(top_s)
+        return ids[:len(nodes)], scores[:len(nodes)]
+
+    # ----------------------------------------------------- queued serving --
+    def submit(self, kind: str, node: int, *, window: int = 0,
+               k: int = 10, scope: str = "neighbors",
+               deadline_s: float = math.inf,
+               now: Optional[float] = None) -> int:
+        """Enqueue one query; returns its request id. Cache hits are
+        answered immediately (delivered by the next ``pump``)."""
+        explicit = now is not None
+        now = self.clock() if not explicit else now
+        self.recorder.request_submitted(now)
+        if kind == "embed":
+            key = ("embed", int(node), window)
+            group = ("embed", window)
+        elif kind == "rank":
+            key = ("rank", int(node), k, scope)
+            group = ("rank", k, scope)
+        else:
+            raise ValueError(f"kind must be embed|rank, got {kind!r}")
+        cached = self.cache.get(key)
+        self.recorder.cache_lookup(cached is not None)
+        if cached is not None:
+            rid = self.batcher.next_rid()        # answered without queueing
+            done = now if explicit else self.clock()
+            self._ready.append(Response(rid=rid, value=cached,
+                                        t_submit=now, t_done=done))
+            self.recorder.request_completed(now, done)
+            return rid
+        req = self.batcher.submit(group, node,
+                                  deadline=now + deadline_s, now=now)
+        return req.rid
+
+    def _compute_group(self, group: Tuple, nodes: np.ndarray) -> list:
+        """Batched compute for unique ``nodes`` of one group; returns one
+        value per node (row / (ids, scores) tuple)."""
+        if group[0] == "embed":
+            out = self.embed(nodes, window=group[1])
+            return [out[i] for i in range(len(nodes))]
+        _, k, scope = group
+        ids, scores = self.rank_neighbors(nodes, k, scope=scope)
+        return [(ids[i], scores[i]) for i in range(len(nodes))]
+
+    def pump(self, now: Optional[float] = None,
+             drain: bool = False) -> List[Response]:
+        """Flush due batches and return completed/expired responses (plus
+        any cache-hit responses since the last pump). When the caller
+        supplies ``now`` it owns the time base (trace replay on a virtual
+        clock); otherwise the service clock stamps completions after each
+        batch, so latencies include compute."""
+        explicit = now is not None
+        now = self.clock() if not explicit else now
+        responses, self._ready = self._ready, []
+        for group, live, dead in self.batcher.due(now, drain=drain):
+            for r in dead:
+                self.recorder.request_expired()
+                responses.append(Response(rid=r.rid, value=None, expired=True,
+                                          t_submit=r.t_submit, t_done=now))
+            if not live:
+                continue
+            uniq, inv = np.unique(
+                np.asarray([r.node for r in live], np.int64),
+                return_inverse=True)
+            bucket = bucket_for(len(uniq), self.batcher.buckets)
+            self.recorder.batch_launched(len(uniq), bucket)
+            values = self._compute_group(group, uniq.astype(np.int32))
+            done = now if explicit else self.clock()
+            for r, j in zip(live, inv):
+                value = values[int(j)]
+                if group[0] == "embed":
+                    self.cache.put(("embed", r.node, group[1]), value,
+                                   node=r.node)
+                else:
+                    self.cache.put(("rank", r.node, group[1], group[2]),
+                                   value, node=r.node)
+                responses.append(Response(rid=r.rid, value=value,
+                                          t_submit=r.t_submit, t_done=done))
+                self.recorder.request_completed(r.t_submit, done)
+        return responses
+
+    def drain(self, now: Optional[float] = None) -> List[Response]:
+        return self.pump(now=now, drain=True)
+
+    def stats(self) -> ServeStats:
+        return self.recorder.snapshot()

@@ -255,8 +255,10 @@ def test_engine_stats_structure(small_graph):
 
 
 def test_deprecated_shim_matches_engine(small_graph):
+    from repro.core.walk import reset_deprecation_warnings
     pg = PaddedGraph.build(small_graph, cap=16)
     params = WalkParams(p=0.5, q=2.0, length=6)
+    reset_deprecation_warnings()       # the shim warning is one-shot
     with pytest.deprecated_call():
         shim = np.asarray(simulate_walks(pg, np.arange(small_graph.n), 3,
                                          params))
@@ -289,3 +291,57 @@ def test_plan_validation():
     with pytest.raises(ValueError, match="analyze"):
         WalkEngine.build(g, WalkPlan(length=4)).analyze()
     del sharded_engine
+
+
+def test_capacity_auto_validation():
+    WalkPlan(capacity="auto")            # accepted
+    WalkPlan(capacity=16)
+    with pytest.raises(ValueError, match="capacity"):
+        WalkPlan(capacity="turbo")
+    with pytest.raises(ValueError, match="capacity"):
+        WalkPlan(capacity=0)
+
+
+def test_capacity_auto_headroom_skew5():
+    """capacity='auto' on a Skew-5 graph: at least 2x headroom below the
+    zero-drop worst case (capacity == walkers per shard), yet still above
+    the max per-destination demand any exchange actually generates —
+    checked by replaying reference walks through the NEIG slot accounting
+    (a walker at a cold vertex owned by another shard consumes one request
+    slot for that destination in its source shard's buffer)."""
+    from repro.roofline.traffic import walk_auto_capacity
+
+    g = rmat.skew(5, k=10, avg_degree=30, seed=0)
+    cap, S, length = 32, 8, 12
+    assert g.n % S == 0
+    n_local = g.n // S
+    deg = g.deg
+    auto = walk_auto_capacity(deg, cap=cap, num_shards=S,
+                              walkers_per_shard=n_local)
+    worst = n_local                       # one slot per walker per dest
+    assert auto * 2 <= worst, (auto, worst)
+
+    plan = WalkPlan(backend="reference", cap=cap, length=length)
+    walks = WalkEngine.build(g, plan).run(seed=0).walks
+    is_hot = deg > cap                    # hot rows are replicated: no slot
+    src = np.arange(g.n) // n_local       # walkers co-located with starts
+    demand = 0
+    for s in range(length - 1):           # superstep 0 reads the local row
+        v = walks[:, s]
+        need = (~is_hot[v]) & ((v // n_local) != src)
+        counts = np.zeros((S, S), np.int64)
+        np.add.at(counts, (src[need], v[need] // n_local), 1)
+        demand = max(demand, int(counts.max()))
+    assert 0 < demand <= auto, (demand, auto)
+
+
+def test_capacity_auto_sharded_zero_drops():
+    """End-to-end: a sharded engine built with capacity='auto' resolves to
+    a concrete per-destination slot count and drops nothing."""
+    g = rmat.skew(4, k=8, avg_degree=16, seed=3)
+    plan = WalkPlan(length=8, cap=24, backend="sharded", capacity="auto",
+                    strict_drops=True)
+    eng = WalkEngine.build(g, plan)
+    assert isinstance(eng.capacity, int) and 1 <= eng.capacity <= g.n
+    res = eng.run(seed=5)
+    assert res.stats.dropped == 0

@@ -1,0 +1,217 @@
+"""Serving-layer tests (DESIGN.md §13): cache policy, coalescer semantics,
+batched-vs-single bit-identity, deadline shedding, compile-shape bound.
+
+Everything runs on a VirtualClock — time is an explicit argument through the
+whole serve stack, so these tests are deterministic under any machine load.
+"""
+import numpy as np
+import pytest
+
+from repro.data.ingest import load_graph
+from repro.engine import WalkPlan
+from repro.serve import (DeadlineBatcher, EmbeddingService, ResultCache,
+                         VirtualClock, hot_set_admission, prefix_admission,
+                         synthetic_trace, zipf_nodes)
+
+CAP = 24
+
+
+@pytest.fixture(scope="module")
+def graph():
+    # relabel=degree: vertex id == degree rank, hot set == id prefix
+    return load_graph("skew:s=4,k=9,deg=20,seed=3,relabel=degree")
+
+
+def _emb(n, dim=16, seed=0):
+    e = np.random.default_rng(seed).normal(size=(n, dim)).astype(np.float32)
+    return e / np.linalg.norm(e, axis=1, keepdims=True)
+
+
+def _service(graph, clock, **kw):
+    kw.setdefault("plan", WalkPlan(backend="reference", cap=CAP))
+    kw.setdefault("cache_size", 64)
+    kw.setdefault("buckets", (4, 16, 64))
+    return EmbeddingService(graph, _emb(graph.n), clock=clock, **kw)
+
+
+# ---------------------------------------------------------------- cache ----
+
+def test_lru_eviction_order():
+    c = ResultCache(3)
+    for k in "abc":
+        c.put(k, k.upper(), node=0)
+    assert c.keys() == ["a", "b", "c"]
+    c.get("a")                          # refresh: a becomes most recent
+    c.put("d", "D", node=0)             # evicts b (LRU), not a
+    assert "b" not in c and "a" in c
+    assert c.keys() == ["c", "a", "d"]
+    c.put("e", "E", node=0)             # evicts c
+    assert c.keys() == ["a", "d", "e"]
+
+
+def test_hot_prefix_admission(graph):
+    deg = graph.deg
+    hot = hot_set_admission(deg, CAP)
+    pre = prefix_admission(int((deg > CAP).sum()))
+    # relabel=degree: the FN-Cache hot set IS the contiguous id prefix,
+    # so the two admission predicates agree on every vertex
+    for v in range(graph.n):
+        assert hot(v) == pre(v), v
+    assert not hot(-1) and not hot(graph.n + 7)
+
+    c = ResultCache(8, admit=hot)
+    hot_v = 0                            # degree rank 0 == biggest hub
+    cold_v = graph.n - 1
+    assert deg[hot_v] > CAP > deg[cold_v]
+    assert c.put(("embed", hot_v, 0), "x")        # node from tuple key
+    assert not c.put(("embed", cold_v, 0), "y")   # cold: bypasses cache
+    assert ("embed", hot_v, 0) in c and ("embed", cold_v, 0) not in c
+
+
+def test_service_cold_queries_never_evict_hot(graph):
+    clock = VirtualClock()
+    svc = _service(graph, clock, cache_size=4)
+    hubs = [0, 1, 2, 3]
+    for v in hubs:
+        svc.submit("embed", v, now=clock())
+    svc.drain(now=clock())
+    assert len(svc.cache) == 4
+    for v in range(graph.n - 32, graph.n):        # a run of cold queries
+        svc.submit("embed", v, now=clock())
+        svc.drain(now=clock())
+    assert sorted(k[1] for k in svc.cache.keys()) == hubs
+
+
+# ------------------------------------------------------------- coalescer ----
+
+def test_batched_matches_single(graph):
+    """Coalesced batched serving is bit-identical to per-request serving,
+    for plain gathers, walk-averaged embeds, and neighbor ranking."""
+    clock = VirtualClock()
+    svc = _service(graph, clock)
+    nodes = zipf_nodes(graph.n, 32, alpha=1.1, seed=7)
+    for window in (0, 4):
+        batched = svc.embed(nodes, window=window)
+        singles = np.stack([svc.embed(int(v), window=window)[0]
+                            for v in nodes])
+        np.testing.assert_array_equal(batched, singles)
+    ids_b, sc_b = svc.rank_neighbors(nodes, k=6)
+    for i, v in enumerate(nodes):
+        ids_s, sc_s = svc.rank_neighbors(int(v), k=6)
+        np.testing.assert_array_equal(ids_b[i], ids_s[0])
+        np.testing.assert_array_equal(sc_b[i], sc_s[0])
+
+
+def test_coalescer_determinism(graph):
+    """Same request multiset, different arrival orders -> bit-identical
+    per-node responses (RNG keyed on node id, never batch position)."""
+    rng = np.random.default_rng(3)
+    nodes = zipf_nodes(graph.n, 48, alpha=1.1, seed=5)
+
+    def serve(order):
+        clock = VirtualClock()
+        svc = _service(graph, clock, cache_size=1)  # no cross-request reuse
+        got = {}
+        rid_to_node = {}
+        for v in order:
+            rid = svc.submit("embed", int(v), window=3, now=clock())
+            rid_to_node[rid] = int(v)
+            clock.advance(1e-4)
+        for resp in svc.drain(now=clock()):
+            assert not resp.expired
+            got.setdefault(rid_to_node[resp.rid], []).append(resp.value)
+        return got
+
+    a = serve(nodes)
+    b = serve(rng.permutation(nodes))
+    assert set(a) == set(b)
+    for v in a:
+        for x in a[v] + b[v]:
+            np.testing.assert_array_equal(x, a[v][0])
+
+
+def test_deadline_expiry_under_starved_queue(graph):
+    """A queue that is never pumped past its deadlines sheds every queued
+    request as expired — without touching the compute path."""
+    clock = VirtualClock()
+    svc = _service(graph, clock)
+    rids = [svc.submit("embed", int(v), deadline_s=1e-3, now=clock())
+            for v in zipf_nodes(graph.n, 20, alpha=1.1, seed=0)]
+    clock.advance(10.0)                  # starve past every deadline
+    responses = svc.drain(now=clock())
+    assert sorted(r.rid for r in responses) == sorted(rids)
+    assert all(r.expired and r.value is None for r in responses)
+    st = svc.stats()
+    assert st.expired == 20 and st.requests == 0
+    assert st.batches == 0               # shed without launching compute
+
+
+def test_deadline_pulls_batch_forward():
+    """A request whose deadline is within margin flushes its whole group
+    immediately instead of lingering for occupancy."""
+    b = DeadlineBatcher(buckets=(4, 16), linger_s=10.0, margin_s=1e-3)
+    b.submit(("embed", 0), 1, deadline=100.0, now=0.0)
+    assert b.due(now=0.0) == []          # lingering: no occupancy, no rush
+    b.submit(("embed", 0), 2, deadline=0.5, now=0.1)
+    flushes = b.due(now=0.5)             # deadline - now <= margin
+    assert len(flushes) == 1
+    group, live, dead = flushes[0]
+    assert [r.node for r in live] == [1, 2] and dead == []
+
+
+def test_compile_shape_bound(graph):
+    """The jit compile set stays bounded by buckets x query groups even
+    under arbitrary request sizes (pad-to-bucket, no per-size recompile)."""
+    clock = VirtualClock()
+    svc = _service(graph, clock, buckets=(4, 16))
+    rng = np.random.default_rng(0)
+    for size in rng.integers(1, 17, size=12):
+        svc.embed(rng.integers(0, graph.n, size=size))
+        svc.rank_neighbors(rng.integers(0, graph.n, size=size), k=5)
+    kernels = {s[0] for s in svc.compiled_shapes}
+    assert kernels == {"gather", "rank"}
+    assert len(svc.compiled_shapes) <= 2 * len(svc.batcher.buckets)
+    assert {s[1] for s in svc.compiled_shapes} <= set(svc.batcher.buckets)
+
+
+# ------------------------------------------------------------ end-to-end ----
+
+def test_trace_replay_accounts_every_request(graph):
+    """Virtual-clock Zipf replay: every submitted request comes back exactly
+    once (completed or expired), stats add up, hit rate is meaningful."""
+    clock = VirtualClock()
+    svc = _service(graph, clock)
+    num = 300
+    seen = set()
+    for ev in synthetic_trace(graph.n, num, alpha=1.2, qps=10_000.0,
+                              deadline_s=0.05, seed=0):
+        clock.t = ev.t_arrival
+        svc.submit(ev.kind, ev.node, k=5, deadline_s=ev.deadline_s,
+                   now=clock())
+        for r in svc.pump(now=clock()):
+            assert r.rid not in seen
+            seen.add(r.rid)
+    for r in svc.drain(now=clock() + 1.0):
+        assert r.rid not in seen
+        seen.add(r.rid)
+    st = svc.stats()
+    assert st.requests + st.expired == num == len(seen)
+    assert 0.0 < st.cache_hit_rate < 1.0
+    assert 0.0 < st.batch_occupancy <= 1.0
+
+
+def test_accepts_raw_sgns_params(graph):
+    """The service takes a raw SGNS params pytree and normalizes it through
+    skipgram.serving_table — same table as passing the array yourself."""
+    import jax
+
+    from repro.core.skipgram import SGNSConfig, init_params, serving_table
+
+    params = init_params(SGNSConfig(vocab=graph.n, dim=8),
+                         jax.random.PRNGKey(0))
+    svc = EmbeddingService(graph, params,
+                           plan=WalkPlan(backend="reference", cap=CAP))
+    np.testing.assert_array_equal(np.asarray(svc.emb),
+                                  serving_table(params))
+    norms = np.linalg.norm(np.asarray(svc.emb), axis=1)
+    np.testing.assert_allclose(norms, 1.0, atol=1e-5)

@@ -135,3 +135,22 @@ def test_spark_trim_baseline_changes_walks(skewed_graph):
     assert counts.max() <= 5
     # trimmed walks never use edges outside the trimmed graph
     _check_valid(trimmed, walks)
+
+
+def test_deprecation_warning_fires_exactly_once():
+    """simulate_walks warns once per process, not once per call."""
+    import warnings as _warnings
+
+    from repro.core.walk import reset_deprecation_warnings
+
+    g = rmat.wec(5, avg_degree=4, seed=0)
+    pg = PaddedGraph.build(g)
+    starts = np.arange(8)
+    reset_deprecation_warnings()
+    with _warnings.catch_warnings(record=True) as caught:
+        _warnings.simplefilter("always")
+        simulate_walks(pg, starts, 0, WalkParams(length=4))
+        simulate_walks(pg, starts, 1, WalkParams(length=4))
+    dep = [w for w in caught if issubclass(w.category, DeprecationWarning)]
+    assert len(dep) == 1
+    assert "WalkEngine.build" in str(dep[0].message)
