@@ -1,4 +1,5 @@
-.PHONY: ci fast smoke lint serve-smoke bench bench-smoke bench-baseline
+.PHONY: ci fast smoke lint serve-smoke train-smoke bench bench-smoke \
+	bench-baseline
 
 ci:            ## tier-1: full test suite (the per-PR bar; nightly in CI)
 	scripts/ci.sh tier1
@@ -14,6 +15,9 @@ lint:          ## forbidden-API checks only (jax-0.4.37 quirks)
 
 serve-smoke:   ## serving end-to-end + gated serve_* ratios vs baseline
 	scripts/ci.sh serve-smoke
+
+train-smoke:   ## streamed walk→SGNS parity battery + gated train_* ratios
+	scripts/ci.sh train-smoke
 
 bench:         ## run the benchmark battery (CSV rows to stdout)
 	PYTHONPATH=src python -m benchmarks.run

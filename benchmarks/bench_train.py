@@ -1,0 +1,194 @@
+"""Streamed walk→SGNS training benchmark (DESIGN.md §14).
+
+Battery mode (``run()``, wired into ``benchmarks.run``) prints the usual
+``name,us_per_call,derived`` CSV rows: end-to-end walk+train wall time for
+the streamed on-device pipeline vs. the two generate-then-train baselines
+(host corpus path, and the same device trainer without overlap), plus the
+fused-kernel vs jnp per-step ratio.
+
+Smoke mode (``--smoke [out.json]``) merges **ratio** metrics into the
+``BENCH_smoke.json`` schema, gated by ``scripts/bench_compare.py --strict
+--only train_`` (``make train-smoke``):
+
+* ``train_stream_over_concat_us``   — end-to-end wall ratio of the streamed
+                                      pipeline over generate-then-train
+                                      through the host corpus path
+                                      (interleaved runs; machine load
+                                      cancels; < 1 means streaming wins).
+* ``train_h2d_stream_over_concat``  — host→device bytes of the streamed
+                                      path over the per-batch staging the
+                                      host path uploads. Deterministic
+                                      layout arithmetic — exact.
+* ``train_fused_over_jnp_step_us``  — per-train-step wall ratio of the
+                                      fused Pallas SGNS backend over jnp
+                                      autodiff (interpret mode off-TPU, so
+                                      > 1 here; on TPU the kernel is the
+                                      arithmetic-intensity floor).
+"""
+from __future__ import annotations
+
+import json
+import sys
+import time
+
+import jax
+import numpy as np
+
+from benchmarks.common import graph, row, time_fn
+from repro.core.node2vec import Node2VecConfig, generate_walks, \
+    train_embeddings
+from repro.core.skipgram import SGNSConfig, init_params, train_step
+from repro.optim.optimizers import adam
+from repro.runtime.fault_tolerance import WalkRoundRunner
+from repro.train import StreamingSGNSTrainer
+
+SPEC = "wec:k=9,deg=12,seed=1"
+CFG = dict(p=0.5, q=2.0, walk_length=16, num_walks=3, window=5, dim=32,
+           negatives=5, batch_size=512, seed=0)
+
+
+def _cfg(**kw) -> Node2VecConfig:
+    return Node2VecConfig(**{**CFG, **kw})
+
+
+def _run_stream(g, cfg, backend: str = "jnp"):
+    """Streamed pipeline: trainer consumes the runner's dispatch-ahead
+    rounds (round k+1 walks while round k trains)."""
+    trainer = StreamingSGNSTrainer.from_config(g.n, cfg,
+                                               sgns_backend=backend,
+                                               record_loss=False)
+    t0 = time.perf_counter()
+    _, stats = trainer.train(WalkRoundRunner(g, cfg).rounds())
+    return time.perf_counter() - t0, stats
+
+
+def _run_concat_host(g, cfg):
+    """Generate-then-train through the host corpus path (the pre-streaming
+    pipeline: np corpus, np pair expansion, per-batch H2D staging)."""
+    t0 = time.perf_counter()
+    walks = generate_walks(g, cfg)
+    train_embeddings(g, walks, cfg)
+    return time.perf_counter() - t0
+
+
+def _run_concat_dev(g, cfg):
+    """Generate-then-train through the *same* device trainer (no overlap):
+    isolates the overlap win from the on-device-corpus win."""
+    trainer = StreamingSGNSTrainer.from_config(g.n, cfg, record_loss=False)
+    t0 = time.perf_counter()
+    rounds = list(WalkRoundRunner(g, cfg).rounds())
+    _, stats = trainer.train(iter(rounds))
+    return time.perf_counter() - t0, stats
+
+
+def _step_us(backend: str, cfg) -> float:
+    """Per-train-step wall time for one fixed batch (5-step chain per call
+    so the donated-buffer contract is exercised, init cost amortized)."""
+    scfg = SGNSConfig(vocab=512, dim=cfg.dim, negatives=cfg.negatives)
+    opt = adam(cfg.lr)
+    rng = np.random.default_rng(0)
+    batch = {
+        "center": np.asarray(rng.integers(0, 512, cfg.batch_size), np.int32),
+        "pos": np.asarray(rng.integers(0, 512, cfg.batch_size), np.int32),
+        "neg": np.asarray(
+            rng.integers(0, 512, (cfg.batch_size, cfg.negatives)), np.int32),
+        "valid": np.ones(cfg.batch_size, np.float32),
+    }
+
+    def chain():
+        params = init_params(scfg, jax.random.PRNGKey(0))
+        state = opt.init(params)
+        for _ in range(5):
+            params, state, loss = train_step(params, state, batch, opt,
+                                             backend)
+        return loss
+
+    return time_fn(chain, warmup=1, iters=3) / 5
+
+
+def _interleaved(g, cfg):
+    """stream / concat-host / concat-dev, two interleaved passes each (min
+    of the post-warmup passes; load cancels in the ratios)."""
+    _run_stream(g, cfg)            # warmup: compiles walk + train programs
+    _run_concat_host(g, cfg)
+    _run_concat_dev(g, cfg)
+    t_s, t_ch, t_cd, stats = [], [], [], None
+    for _ in range(2):
+        dt, stats = _run_stream(g, cfg)
+        t_s.append(dt)
+        t_ch.append(_run_concat_host(g, cfg))
+        t_cd.append(_run_concat_dev(g, cfg)[0])
+    return min(t_s), min(t_ch), min(t_cd), stats
+
+
+def run() -> None:
+    g = graph(SPEC)
+    cfg = _cfg()
+    t_s, t_ch, t_cd, st = _interleaved(g, cfg)
+    row("train_stream", t_s * 1e6,
+        f"pairs_per_sec={st.pairs / t_s:.0f};"
+        f"tokens_per_sec={st.tokens / t_s:.0f};"
+        f"overlap_efficiency={st.overlap_efficiency:.2f}")
+    row("train_concat_host", t_ch * 1e6,
+        f"stream_speedup={t_ch / t_s:.2f}x")
+    row("train_concat_dev", t_cd * 1e6,
+        f"overlap_only_speedup={t_cd / t_s:.2f}x")
+    jnp_us = _step_us("jnp", cfg)
+    fused_us = _step_us("fused", cfg)
+    row("train_step_jnp", jnp_us, "")
+    row("train_step_fused", fused_us,
+        f"fused_over_jnp={fused_us / jnp_us:.2f}x (interpret off-TPU)")
+
+
+def smoke_metrics(info: dict) -> dict:
+    """The ratio metrics described in the module docstring."""
+    g = graph(SPEC)
+    cfg = _cfg()
+    t_s, t_ch, t_cd, st = _interleaved(g, cfg)
+    info.update({
+        "train_stream_s": t_s,
+        "train_concat_host_s": t_ch,
+        "train_concat_dev_s": t_cd,
+        "train_pairs": st.pairs,
+        "train_steps": st.steps,
+        "train_pairs_per_sec": st.pairs / t_s,
+        "train_tokens_per_sec": st.tokens / t_s,
+        "train_overlap_efficiency": st.overlap_efficiency,
+    })
+    jnp_us = _step_us("jnp", cfg)
+    fused_us = _step_us("fused", cfg)
+    info["train_step_jnp_us"] = jnp_us
+    info["train_step_fused_us"] = fused_us
+    return {
+        "train_stream_over_concat_us": t_s / t_ch,
+        "train_h2d_stream_over_concat":
+            st.h2d_bytes / st.h2d_bytes_concat,
+        "train_fused_over_jnp_step_us": fused_us / jnp_us,
+    }
+
+
+def run_smoke(out_path: str = "BENCH_smoke.json") -> dict:
+    """Merge train metrics into ``out_path`` (existing walk/serve metrics,
+    if the file is already there, are preserved)."""
+    try:
+        with open(out_path) as f:
+            doc = json.load(f)
+    except FileNotFoundError:
+        doc = {"version": 1, "metrics": {}, "info": {}}
+    info = doc.setdefault("info", {})
+    metrics = smoke_metrics(info)
+    doc.setdefault("metrics", {}).update(metrics)
+    with open(out_path, "w") as f:
+        json.dump(doc, f, indent=2, sort_keys=True)
+    for k in sorted(metrics):
+        print(f"{k} = {metrics[k]:.4g}")
+    print(f"wrote {out_path}")
+    return doc
+
+
+if __name__ == "__main__":
+    if "--smoke" in sys.argv:
+        args = [a for a in sys.argv[1:] if a != "--smoke"]
+        run_smoke(args[0] if args else "BENCH_smoke.json")
+    else:
+        run()

@@ -1,5 +1,6 @@
 #!/usr/bin/env bash
-# Tiered CI entry point. Usage: scripts/ci.sh [tier1|fast|smoke|lint|serve-smoke]
+# Tiered CI entry point.
+# Usage: scripts/ci.sh [tier1|fast|smoke|lint|serve-smoke|train-smoke]
 #   tier1 (default) — the full suite, the bar every PR must hold.
 #                     Runtime varies 8 min - 2.5 h with machine load, so it
 #                     runs nightly / on demand, NOT per push.
@@ -10,6 +11,9 @@
 #   serve-smoke     — serving end-to-end: serve_graph --smoke replays a Zipf
 #                     trace, then bench_serve --smoke gates the serve_*
 #                     ratios against the committed baseline
+#   train-smoke     — streamed walk→SGNS training end-to-end: the train
+#                     parity battery, then bench_train --smoke gates the
+#                     train_* ratios against the committed baseline
 set -euo pipefail
 cd "$(dirname "$0")/.."
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
@@ -65,8 +69,8 @@ case "$target" in
     lint
     echo "smoke: import check"
     python -c "import repro.engine, repro.data.ingest, repro.core.graph, \
-repro.core.walk_distributed, repro.roofline.analysis, repro.serve; \
-print('imports OK')"
+repro.core.walk_distributed, repro.roofline.analysis, repro.serve, \
+repro.train; print('imports OK')"
     echo "smoke: collect-only"
     python -m pytest -q --collect-only >/dev/null
     echo "smoke: fast unit subset"
@@ -81,6 +85,15 @@ print('imports OK')"
     exec python scripts/bench_compare.py BENCH_smoke.json \
       benchmarks/baselines/BENCH_smoke.json --strict --only serve_
     ;;
-  *) echo "unknown target: $target (want tier1|fast|smoke|lint|serve-smoke)" >&2
+  train-smoke)
+    echo "train-smoke: streamed-vs-concat / fused-vs-jnp parity battery"
+    python -m pytest -x -q tests/test_train.py
+    echo "train-smoke: train_* ratios vs baseline"
+    python -m benchmarks.bench_train --smoke BENCH_smoke.json
+    exec python scripts/bench_compare.py BENCH_smoke.json \
+      benchmarks/baselines/BENCH_smoke.json --strict --only train_
+    ;;
+  *) echo "unknown target: $target" \
+          "(want tier1|fast|smoke|lint|serve-smoke|train-smoke)" >&2
      exit 2 ;;
 esac

@@ -43,6 +43,8 @@ class Node2VecConfig:
     lr: float = 0.025
     mode: str = "exact"           # exact | approx | approx_always
     approx_eps: float = 1e-3
+    sgns_backend: str = "jnp"     # stage-2 gradient backend: jnp | fused
+                                  # (the Pallas kernel, repro.kernels.sgns)
     cap: Optional[int] = None     # cold row width (None -> FN-Base layout)
     seed: int = 0
     backend: Optional[str] = None  # None -> sharded iff a mesh is given

@@ -64,13 +64,51 @@ def sgns_loss(params, center: jnp.ndarray, pos: jnp.ndarray,
     return jnp.sum(per * valid) / denom
 
 
-@functools.partial(jax.jit, static_argnames=("opt",), donate_argnums=(0, 1))
-def train_step(params, opt_state, batch, opt: Optimizer):
-    def loss_fn(p):
-        return sgns_loss(p, batch["center"], batch["pos"], batch["neg"],
-                         batch.get("valid"))
+SGNS_BACKENDS = ("jnp", "fused")
 
-    loss, grads = jax.value_and_grad(loss_fn)(params)
+
+def sgns_grads(params, batch, backend: str = "jnp"):
+    """Loss + parameter gradients for one SGNS batch.
+
+    ``backend="jnp"``   — autodiff through the gathered-rows loss (reference).
+    ``backend="fused"`` — gather rows, run the Pallas fused loss+grad kernel
+    (``repro.kernels.sgns``: ci/po/no read once, three grads written once),
+    scatter-add the row grads back into the tables. Same math as autodiff
+    (the kernel-vs-autodiff contract is tested in tests/test_kernels.py);
+    interpret mode off-TPU.
+    """
+    center, pos, negs = batch["center"], batch["pos"], batch["neg"]
+    valid = batch.get("valid")
+    if backend == "jnp":
+        def loss_fn(p):
+            return sgns_loss(p, center, pos, negs, valid)
+
+        return jax.value_and_grad(loss_fn)(params)
+    if backend != "fused":
+        raise ValueError(
+            f"sgns backend must be one of {SGNS_BACKENDS}, got {backend!r}")
+    from repro.kernels.ops import sgns_fused_op
+    v = jnp.ones(center.shape[0], jnp.float32) if valid is None else \
+        valid.astype(jnp.float32)
+    ci = params["emb_in"][center]
+    po = params["emb_out"][pos]
+    no = params["emb_out"][negs]
+    loss_sum, g_ci, g_po, g_no = sgns_fused_op(ci, po, no, v)
+    # the kernel returns the masked *sum*; the jnp path trains on the masked
+    # mean — scale by the same denominator so both backends see one gradient
+    denom = jnp.maximum(jnp.sum(v), 1.0)
+    g_in = jnp.zeros_like(params["emb_in"]).at[center].add(g_ci / denom)
+    g_out = (jnp.zeros_like(params["emb_out"])
+             .at[pos].add(g_po / denom)
+             .at[negs].add(g_no / denom))
+    return loss_sum / denom, {"emb_in": g_in, "emb_out": g_out}
+
+
+@functools.partial(jax.jit, static_argnames=("opt", "backend"),
+                   donate_argnums=(0, 1))
+def train_step(params, opt_state, batch, opt: Optimizer,
+               backend: str = "jnp"):
+    loss, grads = sgns_grads(params, batch, backend)
     updates, opt_state = opt.update(grads, opt_state, params)
     params = apply_updates(params, updates)
     return params, opt_state, loss

@@ -77,7 +77,12 @@ def walks_to_sgns_batches(walks: np.ndarray, vocab: int, window: int,
             pad = batch_size - b
             c = np.pad(centers[idx], (0, pad))
             p = np.pad(contexts[idx], (0, pad))
-            neg = sampler.sample(rng, (batch_size, negatives))
+            # negatives only for the b live rows: padded tails (valid == 0)
+            # contribute nothing to the loss, so drawing for them just burns
+            # rng + alias lookups
+            neg = np.zeros((batch_size, negatives), np.int32)
+            if b:
+                neg[:b] = sampler.sample(rng, (b, negatives))
             valid = np.pad(np.ones(b, np.float32), (0, pad))
             yield {"center": c, "pos": p, "neg": neg, "valid": valid}
 

@@ -4,7 +4,10 @@ Two modes, selectable via ``--task``:
 
 * ``node2vec``  — the paper's pipeline: RMAT graph -> distributed
   Fast-Node2Vec walks (FN-Multi rounds, checkpointed) -> SGNS embeddings.
-  Walk generation for round k overlaps SGNS training on round k-1's corpus.
+  Stage 2 streams: the trainer optimizes round k-1 on device (resident
+  walks, device pair-gen + alias negatives, ``--sgns-backend`` jnp/fused)
+  while round k walks; ``--concat`` selects the generate-then-train
+  host-corpus baseline.
 * ``lm``        — train any assigned architecture (``--arch``) on the walk
   corpus (DeepWalk-style token streams) or on synthetic tokens, with the
   production sharding rules, checkpoint/restart, and (optionally) int8
@@ -23,8 +26,6 @@ from __future__ import annotations
 
 import argparse
 import os
-import queue
-import threading
 import time
 
 import jax
@@ -34,16 +35,15 @@ import numpy as np
 from repro import configs
 from repro.checkpoint.checkpointer import Checkpointer
 from repro.core.node2vec import Node2VecConfig, train_embeddings
-from repro.core.skipgram import SGNSConfig, init_params as sgns_init, \
-    train_step as sgns_step
-from repro.data.corpus import walks_to_lm_tokens, walks_to_sgns_batches
+from repro.data.corpus import walks_to_lm_tokens
 from repro.data.ingest import load_graph
 from repro.engine import WalkEngine, WalkPlan
 from repro.launch.mesh import make_rw_mesh
 from repro.models import model as M
-from repro.optim.optimizers import adam, adamw, apply_updates
+from repro.optim.optimizers import adamw, apply_updates
 from repro.optim.grad_utils import clip_by_global_norm
 from repro.runtime.fault_tolerance import WalkRoundRunner
+from repro.train import StreamingSGNSTrainer
 
 
 def graph_spec(args) -> str:
@@ -59,29 +59,32 @@ def run_node2vec(args):
     mesh = make_rw_mesh() if jax.device_count() > 1 else None
     n2v = Node2VecConfig(p=args.p, q=args.q, walk_length=args.walk_length,
                          num_walks=args.rounds, dim=args.dim,
+                         window=args.window, negatives=args.negatives,
+                         batch_size=args.sgns_batch,
+                         sgns_backend=args.sgns_backend,
                          mode=args.mode, cap=args.cap, seed=args.seed)
     ckpt = Checkpointer(args.ckpt_dir)
     runner = WalkRoundRunner(g, n2v, mesh=mesh, checkpointer=ckpt)
 
-    # pipeline overlap: walk round k while SGNS trains on round k-1
-    corpus_q: "queue.Queue" = queue.Queue(maxsize=2)
-
-    def producer():
-        for walks in runner.rounds():
-            corpus_q.put(walks)
-        corpus_q.put(None)
-
-    t = threading.Thread(target=producer, daemon=True)
-    t.start()
-    all_walks = []
-    while True:
-        w = corpus_q.get()
-        if w is None:
-            break
-        all_walks.append(w)
-        print(f"round done: {w.shape[0]} walks of {w.shape[1]} steps")
-    walks = np.concatenate(all_walks, axis=0)
-    emb = train_embeddings(g, walks, n2v)
+    if args.concat:
+        # generate-then-train baseline (the pre-streaming pipeline shape):
+        # collect every round on host, then run the host corpus path
+        walks = np.concatenate(list(runner.rounds()), axis=0)
+        print(f"corpus: {walks.shape[0]} walks of {walks.shape[1]} steps")
+        emb = train_embeddings(g, walks, n2v)
+    else:
+        # streamed stage 2: runner.rounds() dispatches round k+1 before
+        # yielding round k, so the trainer optimizes k while k+1 walks —
+        # the corpus never materializes on host
+        trainer = StreamingSGNSTrainer.from_config(g.n, n2v)
+        emb, ts = trainer.train(runner.rounds())
+        print(f"train[{ts.backend}]: {ts.rounds} rounds, {ts.steps} steps, "
+              f"{ts.pairs} pairs in {ts.wall_seconds:.1f}s "
+              f"({ts.pairs_per_sec:.0f} pairs/s, "
+              f"{ts.tokens_per_sec:.0f} tokens/s)")
+        print(f"overlap: walk_wait {ts.walk_wait_seconds:.2f}s, "
+              f"efficiency {ts.overlap_efficiency:.2f}; "
+              f"h2d {ts.h2d_bytes} B vs {ts.h2d_bytes_concat} B staged")
     out = os.path.join(args.ckpt_dir, "embeddings.npy")
     np.save(out, emb)
     print(f"embeddings: {emb.shape} -> {out}")
@@ -166,6 +169,17 @@ def main():
     ap.add_argument("--mode", choices=["exact", "approx"], default="exact")
     ap.add_argument("--cap", type=int, default=None)
     ap.add_argument("--dim", type=int, default=64)
+    ap.add_argument("--window", type=int, default=10)
+    ap.add_argument("--negatives", type=int, default=5)
+    ap.add_argument("--sgns-batch", type=int, default=1024,
+                    help="SGNS batch size (fixed-shape device batches)")
+    ap.add_argument("--sgns-backend", choices=["jnp", "fused"],
+                    default="jnp",
+                    help="stage-2 gradient backend: jnp autodiff or the "
+                         "fused Pallas SGNS kernel (interpret off-TPU)")
+    ap.add_argument("--concat", action="store_true",
+                    help="generate-then-train baseline instead of the "
+                         "streamed on-device trainer")
     ap.add_argument("--steps", type=int, default=50)
     ap.add_argument("--batch", type=int, default=8)
     ap.add_argument("--seq", type=int, default=128)

@@ -21,10 +21,25 @@ Schedule = Callable[[jnp.ndarray], jnp.ndarray]
 ScalarOrSchedule = Union[float, Schedule]
 
 
-@dataclasses.dataclass(frozen=True)
+@dataclasses.dataclass(frozen=True, eq=False)
 class Optimizer:
     init: Callable[[Any], Any]
     update: Callable[..., Any]  # (grads, state, params) -> (updates, state)
+    # Hashable config identity: two factory calls with the same scalar
+    # hyperparameters build functionally identical closures, so they should
+    # hit the same jit cache entry when passed as a static argument (a fresh
+    # ``adam(lr)`` per run must not recompile every donated-buffer program).
+    # ``None`` (callable schedule / custom mask) falls back to object identity.
+    key: Optional[tuple] = None
+
+    def __eq__(self, other):
+        if (self.key is not None and isinstance(other, Optimizer)
+                and other.key is not None):
+            return self.key == other.key
+        return self is other
+
+    def __hash__(self):
+        return hash(self.key) if self.key is not None else id(self)
 
 
 def _lr_at(lr: ScalarOrSchedule, count: jnp.ndarray) -> jnp.ndarray:
@@ -52,7 +67,8 @@ def sgd(lr: ScalarOrSchedule, momentum: float = 0.0) -> Optimizer:
             updates = jax.tree.map(lambda g: -step_lr * g, grads)
         return updates, SgdState(state.count + 1, mom)
 
-    return Optimizer(init, update)
+    key = ("sgd", lr, momentum) if not callable(lr) else None
+    return Optimizer(init, update, key)
 
 
 class AdamState(NamedTuple):
@@ -97,7 +113,9 @@ def adam(lr: ScalarOrSchedule, b1: float = 0.9, b2: float = 0.999,
                 updates, params, decay_mask)
         return updates, AdamState(count, mu, nu)
 
-    return Optimizer(init, update)
+    key = ("adam", lr, b1, b2, eps, weight_decay) \
+        if not callable(lr) and mask is None else None
+    return Optimizer(init, update, key)
 
 
 def adamw(lr: ScalarOrSchedule, b1: float = 0.9, b2: float = 0.95,

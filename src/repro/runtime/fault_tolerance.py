@@ -98,8 +98,16 @@ class WalkRoundRunner:
                     for i in range(start)]
             for w in done:
                 yield w
-        for r in range(start, self.cfg.num_walks):
-            walks = self.run_round(r)
+        # engine.rounds dispatches round r+1 before finalizing round r, so a
+        # downstream consumer (the streaming SGNS trainer) trains on round r
+        # while round r+1 walks — same per-round seeds as run_round(r)
+        # (round_seed(cfg.seed, r)), so resumed runs stay bit-identical.
+        live = self.engine.rounds(self.cfg.num_walks, seed=self.cfg.seed,
+                                  start=start)
+        for r, res in zip(range(start, self.cfg.num_walks), live):
+            self.round_stats[r] = res.stats
+            self.total_dropped += res.stats.dropped
+            walks = res.walks
             done.append(walks)
             if self.ckpt is not None:
                 s = self.round_stats[r]

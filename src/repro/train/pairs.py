@@ -1,0 +1,66 @@
+"""Device-side SGNS corpus ops (DESIGN.md §14).
+
+The host path (``repro.data.corpus``) materializes every (center, context)
+pair as numpy arrays — O(pairs) host memory and one H2D upload per batch.
+Here the walks array stays resident on device and the corpus never exists:
+
+* :func:`device_pairs` — window-offset gathers over the resident ``[W, L]``
+  walks array. Emits the same pair stream, in the same order, as the host
+  ``sgns_pairs`` *before* its ``c != x`` filter; self-pairs are returned as
+  a validity mask instead of being compacted out, so every shape is static
+  (one compile per (W, L, window), no per-round retrace).
+* :func:`device_negatives` — O(1) Vose alias draws (the same two-uniform
+  scheme as ``repro.core.alias.alias_sample``) from the unigram^0.75 table,
+  vectorized over the whole ``[B, K]`` block.
+
+Both are pure jnp and meant to be called *inside* a jit (the streaming
+trainer fuses pair gather + negative draw + train step into one program).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def num_pairs(walkers: int, length: int, window: int) -> int:
+    """Static pair count for a [walkers, length] round: for each offset
+    ``off in 1..min(window, length-1)`` there are ``2 * walkers *
+    (length - off)`` ordered pairs (both directions)."""
+    o = min(window, length - 1)
+    return 2 * walkers * (o * length - o * (o + 1) // 2)
+
+
+def device_pairs(walks: jnp.ndarray, window: int):
+    """All (center, context) pairs within ±window along each walk.
+
+    walks: [W, L] int32 on device. Returns ``(centers, contexts, valid)``,
+    each ``[num_pairs(W, L, window)]``; ``valid`` masks self-pairs
+    (``center == context`` — dead-end self-loop tails), which the host path
+    filters out and this path trains through with zero weight.
+    """
+    w, l = walks.shape
+    centers, contexts = [], []
+    for off in range(1, min(window, l - 1) + 1):
+        a = walks[:, :l - off].reshape(-1)
+        b = walks[:, off:].reshape(-1)
+        centers.append(a)
+        contexts.append(b)
+        centers.append(b)
+        contexts.append(a)
+    if not centers:
+        z = jnp.zeros(0, jnp.int32)
+        return z, z, jnp.zeros(0, bool)
+    c = jnp.concatenate(centers)
+    x = jnp.concatenate(contexts)
+    return c, x, c != x
+
+
+def device_negatives(key: jax.Array, prob: jnp.ndarray, alias: jnp.ndarray,
+                     shape) -> jnp.ndarray:
+    """Draw ``shape`` negatives from the alias table ``(prob [V], alias [V])``
+    in one vectorized O(1)-per-draw pass."""
+    vocab = prob.shape[0]
+    k1, k2 = jax.random.split(key)
+    slots = jax.random.randint(k1, shape, 0, vocab)
+    u = jax.random.uniform(k2, shape)
+    return jnp.where(u >= prob[slots], alias[slots], slots).astype(jnp.int32)
