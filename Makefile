@@ -1,5 +1,5 @@
-.PHONY: ci fast smoke lint serve-smoke train-smoke bench bench-smoke \
-	bench-baseline
+.PHONY: ci fast smoke lint serve-smoke train-smoke update-smoke bench \
+	bench-smoke bench-baseline
 
 ci:            ## tier-1: full test suite (the per-PR bar; nightly in CI)
 	scripts/ci.sh tier1
@@ -18,6 +18,9 @@ serve-smoke:   ## serving end-to-end + gated serve_* ratios vs baseline
 
 train-smoke:   ## streamed walk→SGNS parity battery + gated train_* ratios
 	scripts/ci.sh train-smoke
+
+update-smoke:  ## delta/engine.update parity battery + gated update_* ratios
+	scripts/ci.sh update-smoke
 
 bench:         ## run the benchmark battery (CSV rows to stdout)
 	PYTHONPATH=src python -m benchmarks.run

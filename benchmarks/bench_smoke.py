@@ -122,6 +122,8 @@ def run(out_path: str = "BENCH_smoke.json") -> dict:
     metrics.update(_serve_metrics(info))
     from benchmarks.bench_train import smoke_metrics as _train_metrics
     metrics.update(_train_metrics(info))
+    from benchmarks.bench_update import smoke_metrics as _update_metrics
+    metrics.update(_update_metrics(info))
     doc = {"version": 1, "metrics": metrics, "info": info}
     with open(out_path, "w") as f:
         json.dump(doc, f, indent=2, sort_keys=True)

@@ -1,0 +1,183 @@
+"""Incremental-update benchmark: ``WalkEngine.update`` vs full rebuild.
+
+The PR-9 tentpole claim: a delta batch touching a small fraction of the
+shards patches the resident device layout (host CSR splice + affected-row
+alias resplice) several times faster than rebuilding the whole FN-Cache
+layout from the patched CSR — at **bit-identical** resulting walks. The
+crossover battery (``run()``) shows where that stops being true: as churn
+spreads across the graph (and starts flipping hot-set membership, forcing
+relayouts) the advantage collapses toward 1x.
+
+Battery mode prints the usual ``name,us_per_call,derived`` CSV rows, one
+per churn scale. Update and rebuild timings are interleaved per batch —
+each timed batch is *distinct* (re-applying one batch degenerates into
+cheap repeat weight-updates) — so machine load cancels in the ratio.
+
+Smoke mode (``--smoke [out.json]``) merges ratio / deterministic metrics
+into the ``BENCH_smoke.json`` schema, gated by ``scripts/bench_compare.py
+--strict`` and asserted against the ISSUE-9 acceptance bars directly:
+
+* ``update_rebuild_over_update_us`` — full-rebuild-time / update-time for
+                                  weight churn confined to the top-256
+                                  degree ranks (<= 10% of shards under
+                                  ``relabel=degree``). Gate: >= 3.
+* ``update_invalidated_shard_fraction`` — WalkStats-reported fraction of
+                                  device shards invalidated by that churn
+                                  (deterministic). Gate: <= 0.10.
+* ``update_bit_identical``        — 1.0 iff the updated engine's walks
+                                  equal a from-scratch engine's at the
+                                  same store version (exact).
+"""
+from __future__ import annotations
+
+import json
+import sys
+import time
+
+import numpy as np
+
+from benchmarks.common import row
+from repro.data import open_graph
+from repro.data.deltas import weight_churn, zipf_churn
+from repro.engine import WalkEngine, WalkPlan
+
+SPEC_BASE = "rmat:k=13,deg=16,seed=0"      # 8192 vertices, ~131k edges
+SPEC = SPEC_BASE + ",relabel=degree"
+CAP = 16
+TOP = 256                                   # churn prefix -> <= 10% shards
+LENGTH = 8
+SMOKE_BATCHES = 5
+
+
+def _plan() -> WalkPlan:
+    return WalkPlan(p=0.5, q=2.0, length=LENGTH, cap=CAP)
+
+
+def _block(pg) -> None:
+    import jax
+    jax.block_until_ready((pg.adj, pg.wgt, pg.alias_p, pg.hot_wgt))
+
+
+def _timed_churn(batches, warmup_batch=None):
+    """Interleaved per-batch timing: engine.update on a live engine vs
+    WalkEngine.build from a shadow store held at the same version.
+
+    Returns (update_us, rebuild_us, relayouts, updated_engine,
+    fresh_engine_at_final_version)."""
+    eng = WalkEngine.build(SPEC, _plan())
+    _block(eng.pg)
+    shadow = open_graph(SPEC)
+    if warmup_batch is not None:            # touch both paths once untimed
+        eng.update(warmup_batch)
+        shadow.apply(warmup_batch)
+        _block(WalkEngine.build(shadow, _plan()).pg)
+    t_up, t_reb, relayouts = [], [], 0
+    fresh = None
+    for b in batches:
+        t0 = time.perf_counter()
+        rep = eng.update(b)
+        _block(eng.pg)
+        t_up.append(time.perf_counter() - t0)
+        relayouts += int(rep.relayout)
+
+        shadow.apply(b)
+        t0 = time.perf_counter()
+        fresh = WalkEngine.build(shadow, _plan())
+        _block(fresh.pg)
+        t_reb.append(time.perf_counter() - t0)
+    return (float(np.sum(t_up) * 1e6), float(np.sum(t_reb) * 1e6),
+            relayouts, eng, fresh)
+
+
+def _weight_batches(num: int, seed: int = 0, top: int = TOP,
+                    batch_edges: int = 128):
+    """Weight-only churn in ORIGINAL ids (the store remaps through the
+    frozen degree perm) — the guaranteed no-relayout path."""
+    g0 = open_graph(SPEC_BASE).graph
+    return list(weight_churn(g0, num_batches=num, batch_edges=batch_edges,
+                             seed=seed, top=top))
+
+
+def run() -> None:
+    # the gated steady-state path: weight churn on the hot prefix
+    batches = _weight_batches(4, seed=0)
+    up_us, reb_us, relayouts, eng, fresh = _timed_churn(
+        batches[1:], warmup_batch=batches[0])
+    res, ref = eng.run(seed=3), fresh.run(seed=3)
+    bit = bool(np.array_equal(res.walks, ref.walks))
+    row("update_weight_top256", up_us / len(batches[1:]),
+        f"rebuild_us={reb_us / len(batches[1:]):.0f};"
+        f"ratio={reb_us / up_us:.1f}x;"
+        f"inv_frac={res.stats.invalidated_shard_fraction:.3f};"
+        f"relayouts={relayouts};bit_identical={bit}")
+
+    # the crossover: topology churn at widening scope — adds/removes flip
+    # hot-set membership, relayouts kick in, and the advantage collapses
+    g0 = open_graph(SPEC_BASE).graph
+    for label, top, edges in [("top256", 256, 64),
+                              ("top2048", 2048, 512),
+                              ("global", None, 4096)]:
+        bs = list(zipf_churn(g0, num_batches=3, batch_edges=edges, seed=1,
+                             top=top))
+        up_us, reb_us, relayouts, eng, fresh = _timed_churn(
+            bs[1:], warmup_batch=bs[0])
+        res, ref = eng.run(seed=3), fresh.run(seed=3)
+        bit = bool(np.array_equal(res.walks, ref.walks))
+        row(f"update_topo_{label}", up_us / 2,
+            f"rebuild_us={reb_us / 2:.0f};ratio={reb_us / up_us:.1f}x;"
+            f"inv_frac={res.stats.invalidated_shard_fraction:.3f};"
+            f"relayouts={relayouts};bit_identical={bit}")
+
+
+def smoke_metrics(info: dict) -> dict:
+    """The gated metrics described in the module docstring."""
+    batches = _weight_batches(SMOKE_BATCHES, seed=0)
+    up_us, reb_us, relayouts, eng, fresh = _timed_churn(
+        batches[1:], warmup_batch=batches[0])
+    assert relayouts == 0, "weight-only churn must never force a relayout"
+
+    res, ref = eng.run(seed=3), fresh.run(seed=3)
+    bit = bool(np.array_equal(res.walks, ref.walks))
+    inv = float(res.stats.invalidated_shard_fraction)
+    ratio = reb_us / up_us
+
+    assert bit, "updated engine diverged from from-scratch rebuild"
+    assert inv <= 0.10, f"churn invalidated {inv:.1%} of shards (> 10%)"
+    assert ratio >= 3.0, \
+        f"update only {ratio:.1f}x faster than rebuild (< 3x gate)"
+
+    info["update_us_per_batch"] = up_us / (SMOKE_BATCHES - 1)
+    info["update_rebuild_us_per_batch"] = reb_us / (SMOKE_BATCHES - 1)
+    info["update_graph_version"] = int(res.stats.graph_version)
+    info["update_delta_edges"] = int(res.stats.delta_edges)
+    return {
+        "update_rebuild_over_update_us": ratio,
+        "update_invalidated_shard_fraction": inv,
+        "update_bit_identical": 1.0 if bit else 0.0,
+    }
+
+
+def run_smoke(out_path: str = "BENCH_smoke.json") -> dict:
+    """Merge update metrics into ``out_path`` (existing metrics preserved)."""
+    try:
+        with open(out_path) as f:
+            doc = json.load(f)
+    except FileNotFoundError:
+        doc = {"version": 1, "metrics": {}, "info": {}}
+    info = doc.setdefault("info", {})
+    metrics = smoke_metrics(info)
+    doc.setdefault("metrics", {}).update(metrics)
+    with open(out_path, "w") as f:
+        json.dump(doc, f, indent=2, sort_keys=True)
+    for k in sorted(metrics):
+        print(f"{k} = {metrics[k]:.4g}")
+    print(f"wrote {out_path}")
+    return doc
+
+
+if __name__ == "__main__":
+    if "--smoke" in sys.argv:
+        args = [a for a in sys.argv[1:] if a != "--smoke"]
+        run_smoke(args[0] if args else "BENCH_smoke.json")
+    else:
+        run()

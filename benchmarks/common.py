@@ -39,11 +39,11 @@ def graph(spec: str, cache_dir: str = None):
     across bench runs (EXPERIMENTS.md §Datasets)."""
     import os
 
-    from repro.data.ingest import load_graph
+    from repro.data import open_graph
     cache = cache_dir or os.environ.get("BENCH_GRAPH_CACHE")
-    return load_graph(spec, cache_dir=cache)
+    return open_graph(spec, cache_dir=cache).graph
 
 
 def dataset(spec: str):
-    from repro.data.ingest import load_dataset
-    return load_dataset(spec)
+    from repro.data.ingest import _load_dataset
+    return _load_dataset(spec)

@@ -10,7 +10,8 @@ def main() -> None:
     from benchmarks import (bench_accuracy, bench_breakdown,
                             bench_efficiency, bench_growth, bench_memory,
                             bench_scaling, bench_serve, bench_skew,
-                            bench_train, bench_wec, roofline_table)
+                            bench_train, bench_update, bench_wec,
+                            roofline_table)
     print("name,us_per_call,derived")
     suites = [
         ("breakdown (Fig.1)", bench_breakdown),
@@ -23,6 +24,7 @@ def main() -> None:
         ("accuracy (Fig.6)", bench_accuracy),
         ("serving (DESIGN §13)", bench_serve),
         ("training (DESIGN §14)", bench_train),
+        ("incremental updates (DESIGN §15)", bench_update),
         ("roofline table (dry-run)", roofline_table),
     ]
     failed = []

@@ -11,10 +11,10 @@ import numpy as np
 
 from repro.core.node2vec import (Node2VecConfig, generate_walks,
                                  train_embeddings)
-from repro.data.ingest import load_dataset
+from repro.data import open_graph
 
-ds = load_dataset("sbm:n=400,c=4,pin=0.06,pout=0.004,seed=1")
-graph, labels = ds.graph, ds.labels
+store = open_graph("sbm:n=400,c=4,pin=0.06,pout=0.004,seed=1")
+graph, labels = store.graph, store.labels
 rng = np.random.default_rng(0)
 graph.wgt = (rng.random(graph.m) * 4 + 0.5).astype(np.float32)
 print(f"graph: {graph.n} vertices, {graph.m} edges, 4 communities")

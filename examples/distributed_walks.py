@@ -17,14 +17,14 @@ from jax.sharding import Mesh  # noqa: E402
 
 from repro.checkpoint.checkpointer import Checkpointer  # noqa: E402
 from repro.core.node2vec import Node2VecConfig  # noqa: E402
-from repro.data.ingest import load_graph  # noqa: E402
+from repro.data import open_graph  # noqa: E402
 from repro.engine import WalkEngine  # noqa: E402
 from repro.runtime.balance import shard_balance  # noqa: E402
 from repro.runtime.fault_tolerance import WalkRoundRunner  # noqa: E402
 
 # degree-descending relabel: hubs become the contiguous id prefix, so the
 # range partition below spreads FN-Cache hot rows evenly across shards
-graph = load_graph("skew:s=3,k=10,deg=25,seed=0,relabel=degree")
+graph = open_graph("skew:s=3,k=10,deg=25,seed=0,relabel=degree").graph
 print(f"graph: {graph.n} vertices, {graph.m} edges, "
       f"max degree {graph.max_degree}")
 rep = shard_balance(graph, num_shards=8, cap=32)

@@ -14,10 +14,11 @@ nearest neighbors of the highest-degree vertex in embedding space. Swap
 import numpy as np
 
 from repro.core.node2vec import Node2VecConfig, train_embeddings
-from repro.data.ingest import load_graph
+from repro.data import open_graph
 from repro.engine import WalkEngine, WalkPlan
 
-graph = load_graph("wec:k=10,deg=30,seed=0")         # 1024 vertices
+store = open_graph("wec:k=10,deg=30,seed=0")         # 1024 vertices
+graph = store.graph
 print(f"graph: {graph.n} vertices, {graph.m} edges, "
       f"max degree {graph.max_degree}")
 

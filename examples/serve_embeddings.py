@@ -11,20 +11,21 @@ the deadline-aware request queue under a burst of Zipf traffic.
 import numpy as np
 
 from repro.core.node2vec import Node2VecConfig
-from repro.data.ingest import load_graph
+from repro.data import open_graph
 from repro.engine import WalkPlan
 from repro.serve import EmbeddingService, synthetic_trace
 
 # relabel=degree makes vertex id == degree rank: the cache admission
 # policy's hot prefix and Zipf query popularity line up by construction
-graph = load_graph("wec:k=9,deg=20,seed=0,relabel=degree")     # 512 vertices
+store = open_graph("wec:k=9,deg=20,seed=0,relabel=degree")     # 512 vertices
+graph = store.graph
 print(f"graph: {graph.n} vertices, {graph.m} edges, "
       f"max degree {graph.max_degree}")
 
 cfg = Node2VecConfig(walk_length=30, num_walks=3, dim=64, epochs=1,
                      batch_size=4096, cap=32, seed=0)
 service = EmbeddingService.from_node2vec(
-    graph, cfg, plan=WalkPlan(backend="reference", cap=32),
+    store, cfg, plan=WalkPlan(backend="reference", cap=32),
     cache_size=128, linger_s=2e-4, margin_s=1e-3)
 print(f"service resident: emb {service.emb.shape}, "
       f"buckets {service.batcher.buckets}")

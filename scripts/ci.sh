@@ -1,6 +1,7 @@
 #!/usr/bin/env bash
 # Tiered CI entry point.
-# Usage: scripts/ci.sh [tier1|fast|smoke|lint|serve-smoke|train-smoke]
+# Usage: scripts/ci.sh [tier1|fast|smoke|lint|serve-smoke|train-smoke|
+#                       update-smoke]
 #   tier1 (default) — the full suite, the bar every PR must hold.
 #                     Runtime varies 8 min - 2.5 h with machine load, so it
 #                     runs nightly / on demand, NOT per push.
@@ -14,6 +15,10 @@
 #   train-smoke     — streamed walk→SGNS training end-to-end: the train
 #                     parity battery, then bench_train --smoke gates the
 #                     train_* ratios against the committed baseline
+#   update-smoke    — incremental graph updates end-to-end: the delta /
+#                     engine.update parity batteries, then bench_update
+#                     --smoke gates the update_* ratios (and the ISSUE-9
+#                     acceptance asserts) against the committed baseline
 set -euo pipefail
 cd "$(dirname "$0")/.."
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
@@ -68,9 +73,9 @@ case "$target" in
   smoke)
     lint
     echo "smoke: import check"
-    python -c "import repro.engine, repro.data.ingest, repro.core.graph, \
-repro.core.walk_distributed, repro.roofline.analysis, repro.serve, \
-repro.train; print('imports OK')"
+    python -c "import repro.engine, repro.data, repro.data.ingest, \
+repro.data.deltas, repro.core.graph, repro.core.walk_distributed, \
+repro.roofline.analysis, repro.serve, repro.train; print('imports OK')"
     echo "smoke: collect-only"
     python -m pytest -q --collect-only >/dev/null
     echo "smoke: fast unit subset"
@@ -93,7 +98,17 @@ repro.train; print('imports OK')"
     exec python scripts/bench_compare.py BENCH_smoke.json \
       benchmarks/baselines/BENCH_smoke.json --strict --only train_
     ;;
+  update-smoke)
+    echo "update-smoke: delta ingestion + engine.update parity batteries"
+    python -m pytest -x -q -m "not slow" tests/test_deltas.py \
+      tests/test_update.py
+    echo "update-smoke: update_* ratios vs baseline"
+    python -m benchmarks.bench_update --smoke BENCH_smoke.json
+    exec python scripts/bench_compare.py BENCH_smoke.json \
+      benchmarks/baselines/BENCH_smoke.json --strict --only update_
+    ;;
   *) echo "unknown target: $target" \
-          "(want tier1|fast|smoke|lint|serve-smoke|train-smoke)" >&2
+          "(want tier1|fast|smoke|lint|serve-smoke|train-smoke|" \
+          "update-smoke)" >&2
      exit 2 ;;
 esac

@@ -27,15 +27,14 @@ Modes:
     unpopular u, if the Eq. 2-3 bound gap < eps, sample from the *static*
     1st-order alias table: O(1) instead of O(deg) (paper §3.4).
 
-DEPRECATED: ``simulate_walks`` is kept as a thin shim; new code goes through
-``repro.engine.WalkEngine`` (see DESIGN.md §4 for the deprecation path).
+The ``simulate_walks`` shim (deprecated in PR 7) was removed in PR 9; all
+callers go through ``repro.engine.WalkEngine`` (DESIGN.md §4).
 """
 from __future__ import annotations
 
 import dataclasses
 import functools
 import warnings
-from typing import Optional
 
 import jax
 import jax.numpy as jnp
@@ -68,16 +67,16 @@ def walker_key(seed_key: jax.Array, walker_id: jnp.ndarray,
 _DEPRECATION_WARNED: set = set()
 
 
-def warn_deprecated_once(name: str, plan_hint: str) -> None:
-    """One-shot ``DeprecationWarning`` for the legacy shims. They sit on
-    loops (FN-Multi rounds, subprocess parity tests), where one warning per
-    process is actionable and one per call is noise."""
+def warn_deprecated_once(name: str, api: str) -> None:
+    """One-shot ``DeprecationWarning`` for legacy shims (currently the
+    ``load_graph``/``load_dataset`` names over ``repro.data.open_graph``).
+    Shims sit on loops and fixtures, where one warning per process is
+    actionable and one per call is noise."""
     if name in _DEPRECATION_WARNED:
         return
     _DEPRECATION_WARNED.add(name)
     warnings.warn(
-        f"{name} is deprecated; build the walk through "
-        f"repro.engine.WalkEngine.build(graph, WalkPlan({plan_hint})) "
+        f"{name} is deprecated; use {api} "
         f"(this warning fires once per process)",
         DeprecationWarning, stacklevel=3)
 
@@ -195,21 +194,3 @@ def run_fused_persistent(pg: PaddedGraph, starts: jnp.ndarray,
     tail = node2vec_walk_op(pg.adj, pg.wgt, pg.deg, starts, v1, rand,
                             sampler.p, sampler.q)
     return jnp.concatenate([v1[:, None], tail], axis=1)
-
-
-def simulate_walks(pg: PaddedGraph, starts: jnp.ndarray, seed: int,
-                   params: WalkParams,
-                   walker_ids: Optional[jnp.ndarray] = None) -> jnp.ndarray:
-    """DEPRECATED shim — use ``WalkEngine.build(graph, plan).run(...)``.
-
-    Simulates ``len(starts)`` biased walks of ``params.length`` steps.
-    Returns [W, length] i32: the sampled steps (excluding the start vertex,
-    matching Algorithm 1 which stores step[0] = first sampled move).
-    """
-    warn_deprecated_once("simulate_walks", "backend='reference'")
-    starts = jnp.asarray(starts, jnp.int32)
-    if walker_ids is None:
-        walker_ids = jnp.arange(starts.shape[0], dtype=jnp.int32)
-    key = jax.random.PRNGKey(seed)
-    return run_reference(pg, starts, walker_ids, key, params.sampler(),
-                         params.length)

@@ -53,15 +53,15 @@ the walkers, so the zero-drop capacity default also halves — per-superstep
 total bytes stay at the barrier level, split across two overlapped
 messages.
 
-DEPRECATED: ``distributed_walks`` is kept as a thin shim; new code goes
-through ``repro.engine.WalkEngine`` (DESIGN.md §4).
+The ``distributed_walks`` shim (deprecated in PR 7) was removed in PR 9;
+all callers go through ``repro.engine.WalkEngine`` (DESIGN.md §4).
 """
 from __future__ import annotations
 
 import dataclasses
 import functools
 import inspect
-from typing import Optional, Tuple
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
@@ -69,7 +69,7 @@ import numpy as np
 from jax.sharding import Mesh, PartitionSpec as P
 
 from repro.core.graph import PAD_ID, PaddedGraph
-from repro.core.walk import WalkParams, walker_key, warn_deprecated_once
+from repro.core.walk import WalkParams, walker_key
 from repro.engine.sampler import HotContext, Sampler, first_order_slots
 
 RW_AXIS = "rw"
@@ -566,31 +566,3 @@ def make_distributed_walk(g: ShardedGraph, mesh: Mesh, params: WalkParams,
                   rep, pspec_rows, pspec_rows, rep),
         out_specs=(pspec_rows, rep))
     return jax.jit(shard_fn)
-
-
-def distributed_walks(pg: PaddedGraph, mesh: Mesh, seed: int,
-                      params: WalkParams, capacity: Optional[int] = None,
-                      starts: Optional[np.ndarray] = None
-                      ) -> Tuple[jnp.ndarray, int]:
-    """DEPRECATED shim — use ``WalkEngine.build(graph, plan, mesh).run(...)``
-    with ``WalkPlan(backend="sharded")``.
-
-    Runs walks for every vertex (or a round subset) on ``mesh``. Returns
-    (walks [W, length] i32, dropped_request_count). The walk rows for
-    padding vertices (id >= pg.n) are self-loops and should be ignored.
-    """
-    warn_deprecated_once("distributed_walks", "backend='sharded'")
-    num_shards = int(np.prod([mesh.shape[a] for a in mesh.axis_names]))
-    g = ShardedGraph.build(pg, num_shards)
-    if starts is None:
-        starts = np.arange(g.n, dtype=np.int32)
-    starts = np.asarray(starts, np.int32)
-    assert starts.shape[0] % num_shards == 0, "walker count must shard evenly"
-    if capacity is None:
-        capacity = starts.shape[0] // num_shards  # safe default: zero drops
-    walker_ids = starts  # walker id == start vertex id (paper: 1 walk/vertex)
-    fn = make_distributed_walk(g, mesh, params, capacity)
-    key = jax.random.PRNGKey(seed)
-    walks, drops = fn(g.adj, g.wgt, g.alias_p, g.alias_i, g.deg, g.hot_pack(),
-                      jnp.asarray(starts), jnp.asarray(walker_ids), key)
-    return walks, int(drops)

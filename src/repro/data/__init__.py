@@ -1,0 +1,40 @@
+"""repro.data — graph ingestion, the versioned GraphStore handle, and the
+edge-delta update path (DESIGN.md §10, §15).
+
+Public surface::
+
+    from repro.data import open_graph, GraphStore, DeltaBatch
+
+    store = open_graph("rmat:k=13,deg=16,relabel=degree")
+    store.apply(DeltaBatch.build(add=([0, 1], [5, 9])))   # version += 1
+
+``load_graph``/``load_dataset`` remain as deprecated shims over
+``open_graph`` (one-shot ``DeprecationWarning``). Submodules: ``ingest``
+(spec registry + CSR builders/cache), ``deltas`` (batch format + CSR
+patch), ``store`` (GraphStore/open_graph), ``corpus``/``pipeline``
+(walk-corpus tooling).
+"""
+from __future__ import annotations
+
+_EXPORTS = {
+    "open_graph": "repro.data.store",
+    "GraphStore": "repro.data.store",
+    "DeltaBatch": "repro.data.deltas",
+    "PatchReport": "repro.data.deltas",
+    "apply_delta_csr": "repro.data.deltas",
+    "zipf_churn": "repro.data.deltas",
+    "Dataset": "repro.data.ingest",
+    "load_graph": "repro.data.ingest",
+    "load_dataset": "repro.data.ingest",
+}
+
+__all__ = sorted(_EXPORTS)
+
+
+def __getattr__(name: str):
+    # lazy: importing repro.data must not pull jax before submodules need it
+    mod = _EXPORTS.get(name)
+    if mod is None:
+        raise AttributeError(f"module 'repro.data' has no attribute {name!r}")
+    import importlib
+    return getattr(importlib.import_module(mod), name)

@@ -225,16 +225,32 @@ def edgelist_to_csr(path: str, n: Optional[int] = None,
 # binary CSR disk cache (np.memmap-backed loads)
 # --------------------------------------------------------------------------
 
-def save_csr(g: CSRGraph, dirpath: str) -> str:
-    """Write ``g`` as ``{indptr,col,wgt}.npy`` + ``meta.json`` under ``dirpath``."""
+def save_csr(g: CSRGraph, dirpath: str, graph_version: int = 0) -> str:
+    """Write ``g`` as ``{indptr,col,wgt}.npy`` + ``meta.json`` under ``dirpath``.
+
+    ``graph_version`` is the delta counter of the graph being saved (0 for a
+    freshly built graph): it rides in ``meta.json`` so a reloaded
+    ``GraphStore`` resumes at the right version and so cache keys derived
+    from a patched graph never alias the pre-patch entry.
+    """
     os.makedirs(dirpath, exist_ok=True)
     np.save(os.path.join(dirpath, "indptr.npy"), g.row_ptr)
     np.save(os.path.join(dirpath, "col.npy"), g.col)
     np.save(os.path.join(dirpath, "wgt.npy"), g.wgt)
-    meta = {"version": CSR_FORMAT_VERSION, "n": int(g.n), "m": int(g.m)}
+    meta = {"version": CSR_FORMAT_VERSION, "n": int(g.n), "m": int(g.m),
+            "graph_version": int(graph_version)}
     with open(os.path.join(dirpath, "meta.json"), "w") as f:
         json.dump(meta, f)
     return dirpath
+
+
+def csr_meta(dirpath: str) -> dict:
+    """The ``meta.json`` of a :func:`save_csr` directory (``graph_version``
+    defaults to 0 for caches written before deltas existed)."""
+    with open(os.path.join(dirpath, "meta.json")) as f:
+        meta = json.load(f)
+    meta.setdefault("graph_version", 0)
+    return meta
 
 
 def load_csr(dirpath: str, mmap: bool = True) -> CSRGraph:
@@ -423,22 +439,30 @@ for _name, _fn, _keys in [
 _COMMON_OPTS = frozenset(("relabel",))
 
 
-def _edgelist_cache_key(path: str, opts: dict) -> str:
-    # relabel is part of the key: the cached artifact is the *final* graph
+def _edgelist_cache_key(path: str, opts: dict, graph_version: int = 0) -> str:
+    # relabel is part of the key: the cached artifact is the *final* graph.
+    # graph_version is the delta counter: a patched graph (version > 0) must
+    # never alias the cache entry of its pre-patch ancestor, whose mtime and
+    # size it may share exactly (in-place splices conserve both).
     st = os.stat(path)
     tag = (f"{os.path.abspath(path)}|{st.st_mtime_ns}|{st.st_size}|"
-           f"v{CSR_FORMAT_VERSION}|{sorted(opts.items())}")
+           f"v{CSR_FORMAT_VERSION}|gv{int(graph_version)}|"
+           f"{sorted(opts.items())}")
     return hashlib.sha1(tag.encode()).hexdigest()[:12]
 
 
-def load_dataset(spec: str, cache_dir: Optional[str] = None) -> Dataset:
+def _load_dataset(spec: str, cache_dir: Optional[str] = None) -> Dataset:
     """Resolve a graph spec string to a :class:`Dataset`.
+
+    Internal (non-deprecated) implementation behind
+    ``repro.data.open_graph``; the public ``load_dataset``/``load_graph``
+    names are thin deprecated shims over it.
 
     ``cache_dir`` (edgelist family only): the chunked build — including any
     ``relabel=degree`` pass — runs once, is written as a binary CSR cache
-    keyed on (path, mtime, size, options), and every later load is
-    ``np.memmap``-backed from that cache (the relabel ``perm`` is cached
-    alongside as ``perm.npy``).
+    keyed on (path, mtime, size, options, graph version), and every later
+    load is ``np.memmap``-backed from that cache (the relabel ``perm`` is
+    cached alongside as ``perm.npy``).
     """
     family, arg, opts = parse_spec(spec)
     if family not in _REGISTRY:
@@ -494,6 +518,18 @@ def load_dataset(spec: str, cache_dir: Optional[str] = None) -> Dataset:
     return Dataset(graph=g, spec=spec, labels=labels, perm=perm)
 
 
+def load_dataset(spec: str, cache_dir: Optional[str] = None) -> Dataset:
+    """DEPRECATED shim — use ``repro.data.open_graph(spec)``; the returned
+    :class:`~repro.data.store.GraphStore` exposes ``.graph``, ``.labels``,
+    ``.perm`` and adds the versioned ``.apply(deltas)`` update path."""
+    from repro.core.walk import warn_deprecated_once
+    warn_deprecated_once("load_dataset", api="repro.data.open_graph(spec)")
+    return _load_dataset(spec, cache_dir=cache_dir)
+
+
 def load_graph(spec: str, cache_dir: Optional[str] = None) -> CSRGraph:
-    """Spec string -> :class:`CSRGraph` (see module docstring for grammar)."""
-    return load_dataset(spec, cache_dir=cache_dir).graph
+    """DEPRECATED shim — use ``repro.data.open_graph(spec).graph`` (see
+    module docstring for the spec grammar)."""
+    from repro.core.walk import warn_deprecated_once
+    warn_deprecated_once("load_graph", api="repro.data.open_graph(spec)")
+    return _load_dataset(spec, cache_dir=cache_dir).graph

@@ -1,0 +1,168 @@
+"""GraphStore — the unified, versioned graph handle (DESIGN.md §15).
+
+``open_graph`` collapses the old ``load_graph``/``load_dataset`` duality
+into one entry point::
+
+    store = open_graph("rmat:k=13,deg=16,seed=0,relabel=degree")
+    store.graph            # host CSRGraph (the current version)
+    store.version          # delta counter, 0 at open
+    store.meta             # {"spec", "n", "m", "version", ...}
+    store.apply(deltas)    # patch in a DeltaBatch -> PatchReport, version += 1
+
+``open_graph`` accepts a spec string, a raw :class:`CSRGraph`, a
+:class:`~repro.data.ingest.Dataset`, or an existing :class:`GraphStore`
+(passthrough) — ``WalkEngine.build`` and ``serve.EmbeddingService`` take
+any of these uniformly and hold the store so their ``update``/``refresh``
+paths can track churn.
+
+Id-space contract under ``relabel=degree``: deltas are expressed in the
+**original** (pre-relabel) vertex ids and mapped through the permutation
+frozen at open time — so ``open_graph(spec)`` followed by the same delta
+sequence is a well-defined, reproducible graph state regardless of when the
+relabel happened (the property tests rebuild exactly this way). The
+permutation is *never* recomputed after deltas: degree churn does not move
+vertices between shards mid-run (bounded staleness; reopen to re-rank).
+"""
+from __future__ import annotations
+
+import os
+from typing import Iterable, Optional, Union
+
+import numpy as np
+
+from repro.core.graph import CSRGraph
+from repro.data.deltas import DeltaBatch, PatchReport, apply_delta_csr
+from repro.data.ingest import (Dataset, _load_dataset, csr_meta, parse_spec,
+                               save_csr)
+
+DEFAULT_PATCH_SHARDS = 64
+
+
+class GraphStore:
+    """A mutable, versioned handle over one resident host graph.
+
+    ``version`` counts applied :class:`DeltaBatch` es (each batch is one
+    atomic version bump). ``num_shards`` is the *patch* granularity — the
+    range partition :func:`~repro.data.deltas.apply_delta_csr` localizes
+    work (and invalidation accounting) to; it is independent of the device
+    mesh, which re-derives its own shard map from the patched CSR.
+    """
+
+    def __init__(self, dataset: Dataset, *,
+                 num_shards: int = DEFAULT_PATCH_SHARDS,
+                 version: int = 0) -> None:
+        self._graph = dataset.graph
+        self.spec = dataset.spec
+        self.labels = dataset.labels
+        self.perm = None if dataset.perm is None \
+            else np.asarray(dataset.perm, np.int64)
+        self.num_shards = max(1, int(num_shards))
+        self.version = int(version)
+        self.last_report: Optional[PatchReport] = None
+
+    # ---------------------------------------------------------- accessors --
+    @property
+    def graph(self) -> CSRGraph:
+        """The current-version host CSR graph."""
+        return self._graph
+
+    @property
+    def meta(self) -> dict:
+        return {
+            "spec": self.spec,
+            "n": int(self._graph.n),
+            "m": int(self._graph.m),
+            "version": self.version,
+            "num_shards": self.num_shards,
+            "relabeled": self.perm is not None,
+            "has_labels": self.labels is not None,
+        }
+
+    def __repr__(self) -> str:  # pragma: no cover - debugging nicety
+        return (f"GraphStore(spec={self.spec!r}, n={self._graph.n}, "
+                f"m={self._graph.m}, version={self.version})")
+
+    # ------------------------------------------------------------- update --
+    def apply(self, deltas: Union[DeltaBatch, Iterable[DeltaBatch]]
+              ) -> PatchReport:
+        """Apply one batch (or a sequence, each a version bump) and return
+        the (aggregated) :class:`~repro.data.deltas.PatchReport`.
+
+        Batches carrying ``base_version`` are rejected unless it matches the
+        store's current version — a stale producer cannot silently clobber a
+        newer graph. Delta ids are original-space; see the module docstring.
+        """
+        batches = [deltas] if isinstance(deltas, DeltaBatch) else list(deltas)
+        if not batches:
+            raise ValueError("apply() needs at least one DeltaBatch")
+        report = None
+        for batch in batches:
+            if not isinstance(batch, DeltaBatch):
+                raise TypeError(
+                    f"expected DeltaBatch, got {type(batch).__name__} — "
+                    f"build one with DeltaBatch.build(add=..., remove=...)")
+            if batch.base_version is not None \
+                    and batch.base_version != self.version:
+                raise ValueError(
+                    f"stale delta batch: built against version "
+                    f"{batch.base_version}, store is at {self.version}")
+            mapped = batch if self.perm is None else batch.remap(self.perm)
+            self._graph, rep = apply_delta_csr(
+                self._graph, mapped, num_shards=self.num_shards)
+            self.version += 1
+            report = rep if report is None else report.merge(rep)
+        self.last_report = report
+        return report
+
+    # --------------------------------------------------------------- save --
+    def save(self, dirpath: str) -> str:
+        """Persist the current version as a ``csr:`` directory (graph +
+        version + perm/labels sidecars); ``open_graph(f"csr:{dirpath}")``
+        restores the store at the same version."""
+        save_csr(self._graph, dirpath, graph_version=self.version)
+        if self.perm is not None:
+            np.save(os.path.join(dirpath, "perm.npy"), self.perm)
+        if self.labels is not None:
+            np.save(os.path.join(dirpath, "labels.npy"),
+                    np.asarray(self.labels))
+        return dirpath
+
+
+def open_graph(source, cache_dir: Optional[str] = None, *,
+               num_shards: int = DEFAULT_PATCH_SHARDS) -> GraphStore:
+    """Open any graph source as a :class:`GraphStore`.
+
+    ``source`` may be a spec string (``"wec:k=10,deg=30"``,
+    ``"edgelist:/path.txt"``, ``"csr:/cache/dir"`` — the
+    ``repro.data.ingest`` grammar), a host :class:`CSRGraph`, a
+    :class:`~repro.data.ingest.Dataset`, or an existing store (returned
+    as-is, so APIs can accept "anything graph-like" and normalize through
+    this one call). ``cache_dir`` is forwarded to the edgelist builder.
+    """
+    if isinstance(source, GraphStore):
+        return source
+    if isinstance(source, Dataset):
+        return GraphStore(source, num_shards=num_shards)
+    if isinstance(source, CSRGraph):
+        return GraphStore(Dataset(graph=source, spec="<CSRGraph>"),
+                          num_shards=num_shards)
+    if not isinstance(source, str):
+        raise TypeError(
+            f"open_graph wants a spec string, CSRGraph, Dataset, or "
+            f"GraphStore; got {type(source).__name__}")
+    ds = _load_dataset(source, cache_dir=cache_dir)
+    version = 0
+    family, arg, _ = parse_spec(source)
+    if family == "csr" and arg is not None:
+        version = int(csr_meta(arg).get("graph_version", 0))
+        if ds.perm is None:
+            perm_path = os.path.join(arg, "perm.npy")
+            if os.path.exists(perm_path):
+                ds = Dataset(graph=ds.graph, spec=ds.spec, labels=ds.labels,
+                             perm=np.load(perm_path))
+        if ds.labels is None:
+            lab_path = os.path.join(arg, "labels.npy")
+            if os.path.exists(lab_path):
+                ds = Dataset(graph=ds.graph, spec=ds.spec,
+                             labels=np.load(lab_path), perm=ds.perm)
+    return GraphStore(ds, num_shards=num_shards, version=version)

@@ -13,15 +13,18 @@ device mesh), ``fused`` (Pallas 2nd-order step kernel; interpret off-TPU).
 All three share one sampling implementation (``repro.engine.sampler``) and
 produce bit-identical walks from the same plan + seed (tested).
 
-The legacy entry points ``core.walk.simulate_walks`` and
-``core.walk_distributed.distributed_walks`` are deprecated shims over this
-API (DESIGN.md §4).
+Graphs churn: ``engine.update(deltas)`` applies a
+``repro.data.DeltaBatch`` through the engine's ``GraphStore`` and patches
+only the affected shards' device rows (``repro.engine.update``, DESIGN.md
+§15), returning an :class:`~repro.engine.update.UpdateReport`. The legacy
+``simulate_walks``/``distributed_walks`` shims (deprecated in PR 7) were
+removed in PR 9.
 """
 from repro.engine.plan import BACKENDS, WalkPlan, WalkResult, WalkStats
 from repro.engine.sampler import Sampler
 
-__all__ = ["BACKENDS", "Sampler", "WalkEngine", "WalkPlan", "WalkResult",
-           "WalkStats", "round_seed"]
+__all__ = ["BACKENDS", "Sampler", "UpdateReport", "WalkEngine", "WalkPlan",
+           "WalkResult", "WalkStats", "round_seed"]
 
 
 def __getattr__(name):
@@ -31,4 +34,7 @@ def __getattr__(name):
     if name in ("WalkEngine", "round_seed"):
         from repro.engine import engine as _engine
         return getattr(_engine, name)
+    if name == "UpdateReport":
+        from repro.engine.update import UpdateReport
+        return UpdateReport
     raise AttributeError(f"module 'repro.engine' has no attribute {name!r}")

@@ -5,9 +5,12 @@ backends (DESIGN.md §3).
     result = engine.run(starts=None, seed=0)     # WalkResult(walks, stats)
     for r in engine.rounds(10, seed=0): ...      # FN-Multi streaming rounds
 
-``build`` accepts a host :class:`CSRGraph` (padded layout derived from the
-plan's cap/hot_cap), a prebuilt :class:`PaddedGraph`, or — for the sharded
-backend only — a :class:`ShardedGraph`, which may be fully *abstract*
+``build`` accepts a spec string / host :class:`CSRGraph` / ``Dataset`` /
+:class:`~repro.data.store.GraphStore` (normalized through
+``repro.data.open_graph``, and the engine keeps the store so
+:meth:`WalkEngine.update` can apply edge deltas incrementally), a prebuilt
+:class:`PaddedGraph`, or — for the sharded backend only — a
+:class:`ShardedGraph`, which may be fully *abstract*
 (``jax.ShapeDtypeStruct`` leaves) for compile-only roofline analysis via
 :meth:`WalkEngine.analyze` (the dry-run path).
 
@@ -30,6 +33,7 @@ from repro.core.graph import PaddedGraph
 from repro.core.walk import run_fused_persistent, run_reference
 from repro.core.walk_distributed import (ShardedGraph, make_distributed_walk)
 from repro.engine.plan import WalkPlan, WalkResult, WalkStats
+from repro.engine.update import UpdateReport, patch_padded, patch_sharded
 from repro.launch.mesh import make_rw_mesh
 from repro.roofline import analysis as roof
 from repro.roofline.traffic import (walk_auto_capacity,
@@ -48,16 +52,19 @@ class WalkEngine:
     def __init__(self, plan: WalkPlan, *, pg: Optional[PaddedGraph] = None,
                  sg: Optional[ShardedGraph] = None,
                  mesh: Optional[Mesh] = None, fn=None,
-                 capacity: Optional[int] = None):
+                 capacity: Optional[int] = None, store=None):
         self.plan = plan
         self.pg = pg
         self.sg = sg
         self.mesh = mesh
         self._fn = fn
         self.capacity = capacity
+        self.store = store              # GraphStore (update() source of truth)
         self._sampler = plan.sampler()
         self._no_hot = pg is not None and \
             int(np.asarray(pg.hot_pos).max(initial=-1)) < 0
+        self._delta_edges = 0           # cumulative churn via update()
+        self._last_invalidated_fraction = 0.0
 
     # ------------------------------------------------------------- build --
     @classmethod
@@ -66,15 +73,20 @@ class WalkEngine:
         """Bind ``plan`` to ``graph``. ``mesh`` is only consulted by the
         sharded backend (default: a 1-D 'rw' mesh over all devices).
 
-        ``graph`` may be a host :class:`CSRGraph`, a prebuilt
-        :class:`PaddedGraph`/:class:`ShardedGraph`, or a dataset spec
-        string (``"wec:k=10,deg=30"``, ``"edgelist:/path.txt"``, ... —
-        resolved by ``repro.data.ingest.load_graph``). CSR input on the
+        ``graph`` may be anything ``repro.data.open_graph`` accepts — a
+        spec string (``"wec:k=10,deg=30"``, ``"edgelist:/path.txt"``, ...),
+        a host :class:`CSRGraph`, a ``Dataset``, or a ``GraphStore`` — in
+        which case the engine holds the (possibly freshly opened) store and
+        supports incremental :meth:`update`. Prebuilt device layouts
+        (:class:`PaddedGraph`/:class:`ShardedGraph`) are also accepted but
+        carry no store, so ``update()`` is unavailable. CSR input on the
         sharded backend takes the shard-by-shard ``ShardedGraph.from_csr``
         path: no dense whole-graph ``PaddedGraph`` intermediate."""
-        if isinstance(graph, str):
-            from repro.data.ingest import load_graph
-            graph = load_graph(graph)
+        store = None
+        if not isinstance(graph, (PaddedGraph, ShardedGraph)):
+            from repro.data import open_graph
+            store = open_graph(graph)
+            graph = store.graph
         if isinstance(graph, ShardedGraph) and plan.backend != "sharded":
             raise ValueError(
                 f"ShardedGraph input requires backend='sharded', "
@@ -82,7 +94,7 @@ class WalkEngine:
         if plan.backend in ("reference", "fused"):
             pg = graph if isinstance(graph, PaddedGraph) else \
                 PaddedGraph.build(graph, cap=plan.cap, hot_cap=plan.hot_cap)
-            return cls(plan, pg=pg)
+            return cls(plan, pg=pg, store=store)
 
         rw = make_rw_mesh(mesh)
         num_shards = int(np.prod([rw.shape[a] for a in rw.axis_names]))
@@ -126,7 +138,8 @@ class WalkEngine:
         fn = make_distributed_walk(sg, rw, plan.params(), capacity,
                                    length=plan.length,
                                    pipeline=plan.pipeline)
-        return cls(plan, pg=pg, sg=sg, mesh=rw, fn=fn, capacity=capacity)
+        return cls(plan, pg=pg, sg=sg, mesh=rw, fn=fn, capacity=capacity,
+                   store=store)
 
     # --------------------------------------------------------------- run --
     @property
@@ -152,8 +165,16 @@ class WalkEngine:
         return (g.adj, g.wgt, g.alias_p, g.alias_i, g.deg, g.hot_pack(),
                 starts, walker_ids, key)
 
+    def _update_meta(self):
+        """(graph_version, delta_edges, invalidated fraction) snapshot —
+        taken at *dispatch* time so streamed rounds report the graph state
+        they actually walked, not the one current at finalize."""
+        gv = self.store.version if self.store is not None else 0
+        return (gv, self._delta_edges, self._last_invalidated_fraction)
+
     def _dispatch(self, starts, seed: int, walker_ids):
-        """Launch one run asynchronously; returns (walks, drops, slice_to)."""
+        """Launch one run asynchronously; returns
+        (walks, drops, slice_to, update_meta)."""
         key = jax.random.PRNGKey(seed)
         if self.plan.backend in ("reference", "fused"):
             if starts is None:
@@ -168,7 +189,7 @@ class WalkEngine:
             else:
                 walks = run_reference(self.pg, starts, walker_ids, key,
                                       self._sampler, self.plan.length)
-            return walks, None, None
+            return walks, None, None, self._update_meta()
 
         if self._abstract():
             raise ValueError("engine was built from an abstract ShardedGraph"
@@ -200,10 +221,10 @@ class WalkEngine:
             np.asarray(walker_ids, np.int32)
         walks, drops = self._fn(*self._sharded_args(
             jnp.asarray(starts), jnp.asarray(walker_ids), key))
-        return walks, drops, slice_to
+        return walks, drops, slice_to, self._update_meta()
 
     def _finalize(self, dispatched) -> WalkResult:
-        walks, drops, slice_to = dispatched
+        walks, drops, slice_to, update_meta = dispatched
         walks = np.asarray(walks)
         if slice_to is not None:
             walks = walks[:slice_to]
@@ -217,12 +238,15 @@ class WalkEngine:
                 raise RuntimeError(msg)
             warnings.warn(msg, RuntimeWarning, stacklevel=3)
         overlap = self._overlap_estimate(int(walks.shape[0]))
+        gv, delta_edges, inv_frac = update_meta
         stats = WalkStats(
             backend=self.plan.backend, walkers=int(walks.shape[0]),
             supersteps=self.plan.length, dropped=dropped,
             collective_bytes=overlap["total_bytes"],
             exposed_collective_bytes=overlap["exposed_bytes"],
-            overlap_efficiency=overlap["efficiency"])
+            overlap_efficiency=overlap["efficiency"],
+            graph_version=gv, delta_edges=delta_edges,
+            invalidated_shard_fraction=inv_frac)
         return WalkResult(walks=walks, stats=stats)
 
     def _collective_estimate(self) -> int:
@@ -264,6 +288,62 @@ class WalkEngine:
                 if r + 1 < num_rounds else None
             yield self._finalize(pending)
             pending = nxt
+
+    # ------------------------------------------------------------ update --
+    def update(self, deltas) -> UpdateReport:
+        """Apply edge deltas to the resident graph *without* a whole-graph
+        rebuild: the store patches the host CSR shard-locally, then only the
+        affected rows' packed adjacency / alias tables / FN-Cache hot
+        entries are spliced into the device layout. Unaffected shards'
+        buffers stay resident and the compiled walk fn is reused; a full
+        relayout (fresh layout + fn) happens only when the static shapes
+        can no longer represent the new graph (see ``repro.engine.update``).
+
+        Frozen across updates (bounded staleness, reopen/rebuild to refresh):
+        the exchange ``capacity`` (plan ``"auto"`` is derived once at build)
+        and, under ``relabel=degree``, the degree ranking. Walks after
+        ``update()`` are bit-identical to a from-scratch engine at the same
+        store version (property-tested on all three backends).
+        """
+        if self.store is None:
+            raise ValueError(
+                "update() needs the engine's GraphStore — build the engine "
+                "from a spec string, CSRGraph, Dataset, or GraphStore (a "
+                "prebuilt PaddedGraph/ShardedGraph carries no host CSR to "
+                "patch)")
+        if self._abstract():
+            raise ValueError("engine was built from an abstract ShardedGraph"
+                             " — only analyze() is available")
+        patch = self.store.apply(deltas)
+        g = self.store.graph
+        aff = patch.affected
+        if self.plan.backend in ("reference", "fused"):
+            self.pg, relayout, hot_rows = patch_padded(
+                self.pg, g, aff, self.plan.cap, self.plan.hot_cap)
+            if relayout:
+                self._no_hot = \
+                    int(np.asarray(self.pg.hot_pos).max(initial=-1)) < 0
+            device_shards = patch.num_shards
+            invalidated = device_shards if relayout \
+                else int(len(patch.affected_shards))
+        else:
+            self.sg, relayout, inv_shards, hot_rows = patch_sharded(
+                self.sg, g, aff, self.plan.cap, self.plan.hot_cap)
+            if relayout:
+                # shapes may have changed (cap / hot set size) -> fresh fn;
+                # capacity stays frozen so the exchange shapes are stable
+                self._fn = make_distributed_walk(
+                    self.sg, self.mesh, self.plan.params(), self.capacity,
+                    length=self.plan.length, pipeline=self.plan.pipeline)
+            device_shards = self.sg.num_shards
+            invalidated = int(len(inv_shards))
+        self._delta_edges += patch.delta_edges
+        self._last_invalidated_fraction = invalidated / max(device_shards, 1)
+        return UpdateReport(
+            patch=patch, version=self.store.version, relayout=relayout,
+            device_shards=device_shards,
+            invalidated_device_shards=invalidated,
+            hot_rows_updated=hot_rows)
 
     # ----------------------------------------------------------- analyze --
     def analyze(self, num_walkers: Optional[int] = None) -> dict:

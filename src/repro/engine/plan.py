@@ -105,6 +105,15 @@ class WalkStats:
                              walk_overlap_model``).
     ``overlap_efficiency`` — ``1 - exposed/total`` collective bytes; 0 when
                              nothing is on the wire or nothing overlaps.
+    ``graph_version``      — the GraphStore delta counter this run's walks
+                             were sampled against (stamped at dispatch time,
+                             so streamed rounds report the version they
+                             actually walked); 0 without a store.
+    ``delta_edges``        — cumulative edge add+remove events applied to
+                             this engine via ``update()`` so far.
+    ``invalidated_shard_fraction`` — fraction of shards whose device rows
+                             the *last* ``update()`` rewrote (1.0 on a full
+                             relayout, 0.0 before any update).
     """
     backend: str
     walkers: int
@@ -113,6 +122,9 @@ class WalkStats:
     collective_bytes: int = 0
     exposed_collective_bytes: int = 0
     overlap_efficiency: float = 0.0
+    graph_version: int = 0
+    delta_edges: int = 0
+    invalidated_shard_fraction: float = 0.0
 
 
 @dataclasses.dataclass(frozen=True)

@@ -1,0 +1,275 @@
+"""Shard-local device updates for the walk engine (DESIGN.md §15).
+
+The host side of an incremental update is the CSR patch
+(``repro.data.deltas.apply_delta_csr``); this module is the device side:
+given the patched CSR and the affected vertex set, recompute **only the
+affected rows'** packed adjacency, alias tables, and (for FN-Cache) hot
+cache entries, and splice them into the resident
+:class:`~repro.core.graph.PaddedGraph` / ShardedGraph with functional
+``.at[rows].set`` updates — unaffected shards' device buffers stay
+resident, and the compiled walk fn is reused (row updates are data-only;
+the jit signature bakes shapes, not values).
+
+The patch falls back to a full **relayout** (fresh ``PaddedGraph.build`` /
+``ShardedGraph.from_csr`` + fn rebuild) exactly when the static layout
+can no longer represent the new graph bit-identically to a from-scratch
+build at the same plan:
+
+* hot-set **membership** changed (a vertex crossed ``deg > cap`` in either
+  direction) — the replicated hot arrays' row set is a static shape;
+* ``plan.cap is None`` (FN-Base) and the max degree grew past the frozen
+  row width;
+* ``plan.hot_cap is None`` and an affected hot vertex outgrew the frozen
+  hot row width (a fresh build would widen it).
+
+Row recomputation mirrors the from-scratch packers exactly (same CSR
+slices, same ``build_alias_rows`` per row, same min/max masking), and
+``build_alias_rows`` is row-independent — so a patched layout is
+bit-identical to the from-scratch layout whenever no relayout was needed,
+and walks are bit-identical in every case (property-tested on all three
+backends).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.alias import build_alias_rows
+from repro.core.graph import PAD_ID, CSRGraph, PaddedGraph
+from repro.core.walk_distributed import ShardedGraph
+from repro.data.deltas import PatchReport
+
+
+@dataclasses.dataclass(frozen=True)
+class UpdateReport:
+    """What one ``WalkEngine.update`` / ``EmbeddingService.refresh`` did.
+
+    ``invalidated_device_shards`` counts mesh shards whose row block was
+    rewritten (all of them on relayout); ``hot_rows_updated`` counts
+    replicated FN-Cache entries patched in place (these are replicated, so
+    they rewrite one row on *every* shard but never force a relayout).
+    """
+    patch: PatchReport
+    version: int
+    relayout: bool
+    device_shards: int
+    invalidated_device_shards: int
+    hot_rows_updated: int
+
+    @property
+    def invalidated_fraction(self) -> float:
+        return self.invalidated_device_shards / max(self.device_shards, 1)
+
+
+def _pack_rows(g: CSRGraph, vertices: np.ndarray, width: int):
+    """CSR slices -> [len(vertices), width] padded rows (the packer shared
+    by ``PaddedGraph.build`` and ``ShardedGraph.from_csr``, row-for-row)."""
+    rows = np.full((len(vertices), width), PAD_ID, np.int32)
+    wrows = np.zeros((len(vertices), width), np.float32)
+    for i, v in enumerate(vertices.tolist()):
+        lo, hi = int(g.row_ptr[v]), int(g.row_ptr[v + 1])
+        d = min(hi - lo, width)
+        rows[i, :d] = g.col[lo:lo + d]
+        wrows[i, :d] = g.wgt[lo:lo + d]
+    return rows, wrows
+
+
+def _masked_min_max(adj: np.ndarray, wgt: np.ndarray, deg: np.ndarray):
+    """Per-row min/max edge weight over live slots; 1.0 for isolated rows
+    (mirrors the ``PaddedGraph.build`` convention bit-for-bit)."""
+    w_min = np.ones(adj.shape[0], np.float32)
+    w_max = np.ones(adj.shape[0], np.float32)
+    nz = deg > 0
+    mask = adj != PAD_ID
+    with np.errstate(invalid="ignore"):
+        w_min[nz] = np.where(mask, wgt, np.inf).min(axis=1)[nz]
+        w_max[nz] = np.where(mask, wgt, -np.inf).max(axis=1)[nz]
+    return w_min, w_max
+
+
+def _pad_to_bucket(idx: np.ndarray, *arrs):
+    """Pad a scatter's row indices (and per-row payloads) to the next power
+    of two by repeating the last entry.
+
+    The scatter's operand count is baked into its compiled shape, so
+    un-bucketed ``.at[rows].set`` recompiles on every batch whose affected
+    count differs — ~30ms per array, dwarfing the splice itself. Duplicate
+    indices are safe for ``set`` because the duplicates carry identical
+    values (any write order yields the same result)."""
+    n = len(idx)
+    b = 1 << max(0, n - 1).bit_length()
+    if b == n:
+        return (idx,) + arrs
+    pad = b - n
+
+    def rep(a):
+        return np.concatenate([a, np.repeat(a[-1:], pad, axis=0)], axis=0)
+
+    return (rep(idx),) + tuple(rep(a) for a in arrs)
+
+
+def _needs_relayout(g: CSRGraph, affected: np.ndarray, was_hot: np.ndarray,
+                    cap: int, hot_cap: int, plan_cap, plan_hot_cap) -> bool:
+    deg_new = g.deg
+    now_hot = deg_new[affected] > cap
+    if np.any(was_hot != now_hot):
+        return True
+    if plan_cap is None and g.max_degree > cap:
+        return True
+    if plan_hot_cap is None and now_hot.any() \
+            and int(deg_new[affected[now_hot]].max()) > hot_cap:
+        return True
+    return False
+
+
+def patch_padded(pg: PaddedGraph, g: CSRGraph, affected: np.ndarray,
+                 plan_cap, plan_hot_cap):
+    """Splice the affected rows of the patched CSR into ``pg``.
+
+    Returns ``(new_pg, relayout, hot_rows_updated)`` — ``new_pg`` shares
+    every unaffected device buffer row with ``pg`` (functional update) or
+    is a fresh ``PaddedGraph.build`` when a relayout was forced.
+    """
+    aff = np.asarray(affected, np.int64)
+    if not aff.size:
+        return pg, False, 0
+    hot_pos_h = np.asarray(pg.hot_pos)
+    was_hot = hot_pos_h[aff] >= 0
+    if _needs_relayout(g, aff, was_hot, pg.cap, pg.hot_cap,
+                       plan_cap, plan_hot_cap):
+        return PaddedGraph.build(g, cap=plan_cap, hot_cap=plan_hot_cap), \
+            True, 0
+
+    deg_new = g.deg
+    rows_adj, rows_wgt = _pack_rows(g, aff, pg.cap)
+    ap, ai = build_alias_rows(rows_wgt)
+    deg_aff = deg_new[aff]
+    w_min_a, w_max_a = _masked_min_max(rows_adj, rows_wgt, deg_aff)
+
+    hot_vs = aff[was_hot]
+    hot_updates = 0
+    h_pack = None
+    if hot_vs.size:
+        hpos = hot_pos_h[hot_vs]
+        h_adj, h_wgt = _pack_rows(g, hot_vs, pg.hot_cap)
+        h_ap, h_ai = build_alias_rows(h_wgt)
+        # hot vertices' scalars come from the full-width hot row
+        h_min, h_max = _masked_min_max(h_adj, h_wgt, deg_new[hot_vs])
+        sel = np.searchsorted(aff, hot_vs)
+        w_min_a[sel], w_max_a[sel] = h_min, h_max
+        h_pack = (hpos, h_adj, h_wgt, h_ap, h_ai)
+        hot_updates = int(hot_vs.size)
+
+    aff_p, rows_adj, rows_wgt, ap, ai, deg_aff, w_min_a, w_max_a = \
+        _pad_to_bucket(aff, rows_adj, rows_wgt, ap, ai, deg_aff,
+                       w_min_a, w_max_a)
+    rows = jnp.asarray(aff_p, jnp.int32)
+    new = dataclasses.replace(
+        pg,
+        adj=pg.adj.at[rows].set(jnp.asarray(rows_adj)),
+        wgt=pg.wgt.at[rows].set(jnp.asarray(rows_wgt)),
+        alias_p=pg.alias_p.at[rows].set(jnp.asarray(ap)),
+        alias_i=pg.alias_i.at[rows].set(jnp.asarray(ai)),
+        deg=pg.deg.at[rows].set(jnp.asarray(deg_aff)),
+        w_min=pg.w_min.at[rows].set(jnp.asarray(w_min_a)),
+        w_max=pg.w_max.at[rows].set(jnp.asarray(w_max_a)))
+    if h_pack is not None:
+        hpos, h_adj, h_wgt, h_ap, h_ai = h_pack
+        hpos, h_adj, h_wgt, h_ap, h_ai = _pad_to_bucket(
+            hpos, h_adj, h_wgt, h_ap, h_ai)
+        hrows = jnp.asarray(hpos, jnp.int32)
+        new = dataclasses.replace(
+            new,
+            hot_adj=new.hot_adj.at[hrows].set(jnp.asarray(h_adj)),
+            hot_wgt=new.hot_wgt.at[hrows].set(jnp.asarray(h_wgt)),
+            hot_alias_p=new.hot_alias_p.at[hrows].set(jnp.asarray(h_ap)),
+            hot_alias_i=new.hot_alias_i.at[hrows].set(jnp.asarray(h_ai)))
+    return new, False, hot_updates
+
+
+def patch_sharded(sg: ShardedGraph, g: CSRGraph, affected: np.ndarray,
+                  plan_cap, plan_hot_cap):
+    """Splice the affected rows into the resident sharded layout.
+
+    Returns ``(new_sg, relayout, invalidated_shards, hot_rows_updated)``;
+    ``invalidated_shards`` are the mesh shards whose row block changed
+    (empty array + relayout=True means "rebuild everything"). The compiled
+    walk fn takes the arrays as runtime args, so a non-relayout patch never
+    recompiles.
+    """
+    aff = np.asarray(affected, np.int64)
+    if not aff.size:
+        return sg, False, np.zeros(0, np.int64), 0
+    hot_ids_h = np.asarray(sg.hot_ids)
+    real_hot = hot_ids_h.size > 0 and int(hot_ids_h[0]) != PAD_ID
+
+    def hot_pos_of(vs):
+        if not real_hot:
+            return np.full(len(vs), -1, np.int64)
+        pos = np.searchsorted(hot_ids_h, vs)
+        pos = np.minimum(pos, len(hot_ids_h) - 1)
+        return np.where(hot_ids_h[pos] == vs, pos, -1)
+
+    was_hot = hot_pos_of(aff) >= 0
+    if _needs_relayout(g, aff, was_hot, sg.cap, sg.hot_cap,
+                       plan_cap, plan_hot_cap):
+        return ShardedGraph.from_csr(g, sg.num_shards, cap=plan_cap,
+                                     hot_cap=plan_hot_cap), \
+            True, np.arange(sg.num_shards, dtype=np.int64), 0
+
+    deg_new = g.deg
+    rows_adj, rows_wgt = _pack_rows(g, aff, sg.cap)
+    ap, ai = build_alias_rows(rows_wgt)
+    deg_aff = deg_new[aff]
+
+    aff_p, rows_adj, rows_wgt, ap, ai, deg_aff = _pad_to_bucket(
+        aff, rows_adj, rows_wgt, ap, ai, deg_aff)
+    rows = jnp.asarray(aff_p, jnp.int32)
+    new = dataclasses.replace(
+        sg,
+        adj=sg.adj.at[rows].set(jnp.asarray(rows_adj)),
+        wgt=sg.wgt.at[rows].set(jnp.asarray(rows_wgt)),
+        alias_p=sg.alias_p.at[rows].set(jnp.asarray(ap)),
+        alias_i=sg.alias_i.at[rows].set(jnp.asarray(ai)),
+        deg=sg.deg.at[rows].set(jnp.asarray(deg_aff)))
+
+    hot_updates = 0
+    hot_vs = aff[was_hot]
+    if hot_vs.size:
+        hpos = hot_pos_of(hot_vs)
+        h_adj, h_wgt = _pack_rows(g, hot_vs, sg.hot_cap)
+        h_ap, h_ai = build_alias_rows(h_wgt)
+        h_min, h_max = _masked_min_max(h_adj, h_wgt, deg_new[hot_vs])
+        h_deg = deg_new[hot_vs]
+        hpos, h_adj, h_wgt, h_ap, h_ai, h_min, h_max, h_deg = \
+            _pad_to_bucket(hpos, h_adj, h_wgt, h_ap, h_ai, h_min, h_max,
+                           h_deg)
+        hrows = jnp.asarray(hpos, jnp.int32)
+        new = dataclasses.replace(
+            new,
+            hot_adj=new.hot_adj.at[hrows].set(jnp.asarray(h_adj)),
+            hot_wgt=new.hot_wgt.at[hrows].set(jnp.asarray(h_wgt)),
+            hot_alias_p=new.hot_alias_p.at[hrows].set(jnp.asarray(h_ap)),
+            hot_alias_i=new.hot_alias_i.at[hrows].set(jnp.asarray(h_ai)),
+            hot_deg=new.hot_deg.at[hrows].set(jnp.asarray(h_deg)),
+            hot_wmin=new.hot_wmin.at[hrows].set(jnp.asarray(h_min)),
+            hot_wmax=new.hot_wmax.at[hrows].set(jnp.asarray(h_max)))
+        hot_updates = int(hot_vs.size)
+    elif not real_hot and (g.n - 1) in aff:
+        # keep the no-hot sentinel's scalar lanes (a copy of row n-1, see
+        # from_csr) in lockstep so patched == from_csr stays bit-exact;
+        # these lanes are masked out of every sample and never affect walks
+        lo = int(g.row_ptr[g.n - 1])
+        d = min(int(g.row_ptr[g.n] - lo), sg.cap)
+        w = g.wgt[lo:lo + d]
+        wmin, wmax = (float(w.min()), float(w.max())) if d else (1.0, 1.0)
+        new = dataclasses.replace(
+            new,
+            hot_deg=jnp.asarray(deg_new[g.n - 1:g.n]),
+            hot_wmin=jnp.full((1,), wmin, jnp.float32),
+            hot_wmax=jnp.full((1,), wmax, jnp.float32))
+
+    invalidated = np.unique(aff // sg.n_local)
+    return new, False, invalidated, hot_updates

@@ -18,20 +18,21 @@ import time
 import numpy as np
 
 from repro.core.node2vec import Node2VecConfig
-from repro.data.ingest import load_graph
+from repro.data import open_graph
 from repro.engine import WalkPlan
 from repro.serve import EmbeddingService, synthetic_trace
 
 
 def build_service(args) -> EmbeddingService:
-    g = load_graph(args.graph, cache_dir=args.graph_cache)
+    store = open_graph(args.graph, cache_dir=args.graph_cache)
+    g = store.graph
     print(f"graph: {args.graph} -> n={g.n} m={g.m} maxdeg={g.max_degree}")
     cfg = Node2VecConfig(walk_length=args.walk_length, num_walks=args.rounds,
                          dim=args.dim, epochs=1, batch_size=4096,
                          cap=args.cap, seed=args.seed)
     t0 = time.time()
     svc = EmbeddingService.from_node2vec(
-        g, cfg, plan=WalkPlan(backend="reference", cap=args.cap),
+        store, cfg, plan=WalkPlan(backend="reference", cap=args.cap),
         cache_size=args.cache_size, linger_s=args.linger_ms * 1e-3,
         margin_s=args.margin_ms * 1e-3, walk_seed=args.seed)
     print(f"walk+SGNS+residency build: {time.time() - t0:.1f}s "

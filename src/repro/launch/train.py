@@ -35,8 +35,8 @@ import numpy as np
 from repro import configs
 from repro.checkpoint.checkpointer import Checkpointer
 from repro.core.node2vec import Node2VecConfig, train_embeddings
+from repro.data import open_graph
 from repro.data.corpus import walks_to_lm_tokens
-from repro.data.ingest import load_graph
 from repro.engine import WalkEngine, WalkPlan
 from repro.launch.mesh import make_rw_mesh
 from repro.models import model as M
@@ -53,7 +53,7 @@ def graph_spec(args) -> str:
 
 
 def run_node2vec(args):
-    g = load_graph(graph_spec(args), cache_dir=args.graph_cache)
+    g = open_graph(graph_spec(args), cache_dir=args.graph_cache).graph
     print(f"graph: {graph_spec(args)} -> n={g.n} m={g.m} "
           f"maxdeg={g.max_degree}")
     mesh = make_rw_mesh() if jax.device_count() > 1 else None
@@ -105,8 +105,9 @@ def run_lm(args):
         print(f"resumed from step {start_step}")
 
     # corpus: walks over a small graph -> token sequences
-    g = load_graph(args.graph, cache_dir=args.graph_cache) if args.graph \
-        else load_graph(f"wec:k={max(args.k, 8)},deg=10,seed={args.seed}")
+    g = open_graph(args.graph, cache_dir=args.graph_cache).graph \
+        if args.graph \
+        else open_graph(f"wec:k={max(args.k, 8)},deg=10,seed={args.seed}").graph
     walks = WalkEngine.build(
         g, WalkPlan(p=1.0, q=1.0, length=64)).run(seed=args.seed).walks
     seq = args.seq
@@ -154,7 +155,7 @@ def main():
     ap.add_argument("--smoke", action="store_true",
                     help="reduced config (CPU-sized)")
     ap.add_argument("--graph", default=None,
-                    help="dataset spec (repro.data.ingest.load_graph): "
+                    help="dataset spec (repro.data.open_graph): "
                          "'wec:k=12,deg=30', 'edgelist:/path/edges.txt', "
                          "'csr:/path/cache_dir', ... (overrides --k)")
     ap.add_argument("--graph-cache", default=None,

@@ -25,6 +25,7 @@ from jax.sharding import Mesh
 from repro.checkpoint.checkpointer import Checkpointer
 from repro.core.graph import CSRGraph
 from repro.core.node2vec import Node2VecConfig
+from repro.data.deltas import DeltaBatch
 from repro.engine import WalkEngine, WalkStats, round_seed
 
 
@@ -61,6 +62,8 @@ class WalkRoundRunner:
         self.engine = WalkEngine.build(g, plan, mesh=mesh)
         self.round_stats: dict = {}   # round -> WalkStats (this process)
         self.total_dropped = 0        # cumulative, survives resume via meta
+        self._pending_updates: list = []   # DeltaBatches queued mid-stream
+        self.update_reports: list = []     # UpdateReport per drained queue
 
     def completed_rounds(self) -> int:
         if self.ckpt is None:
@@ -73,6 +76,28 @@ class WalkRoundRunner:
         self.round_stats[r] = res.stats
         self.total_dropped += res.stats.dropped
         return res.walks
+
+    def submit_update(self, deltas) -> None:
+        """Queue edge deltas to land *between* rounds.
+
+        Batches are drained after the next round is yielded and applied via
+        ``WalkEngine.update`` (shard-local invalidation, no whole-graph
+        rebuild). ``engine.rounds`` dispatches round ``r+1`` before round
+        ``r`` finalizes, so an update submitted while consuming round ``r``
+        first affects round ``r+2`` — bounded staleness of one in-flight
+        round, and never a torn round (every round walks exactly one graph
+        version; ``WalkStats.graph_version`` records which). Updates are
+        not checkpointed: a resumed run replays rounds against the graph it
+        reopens with.
+        """
+        batches = [deltas] if isinstance(deltas, DeltaBatch) else list(deltas)
+        self._pending_updates.extend(batches)
+
+    def _drain_updates(self) -> None:
+        if not self._pending_updates:
+            return
+        batches, self._pending_updates = self._pending_updates, []
+        self.update_reports.append(self.engine.update(batches))
 
     def stats_summary(self) -> dict:
         """Cumulative accounting across yielded rounds (including rounds
@@ -117,9 +142,11 @@ class WalkRoundRunner:
                                      "exposed_collective_bytes":
                                          s.exposed_collective_bytes,
                                      "overlap_efficiency":
-                                         s.overlap_efficiency},
+                                         s.overlap_efficiency,
+                                     "graph_version": s.graph_version},
                                blocking=False)
             yield walks
+            self._drain_updates()
         if self.ckpt is not None:
             self.ckpt.wait()
 

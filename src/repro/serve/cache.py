@@ -85,6 +85,20 @@ class ResultCache:
         self.misses += 1
         return None
 
+    def invalidate_nodes(self, nodes) -> int:
+        """Drop every entry keyed on one of ``nodes`` (the second element
+        of a tuple key, the service convention) — the serving side of a
+        graph delta: results computed from a patched vertex's old row must
+        not outlive it. Returns the number of entries dropped."""
+        ns = {int(v) for v in np.asarray(nodes, np.int64).ravel()}
+        if not ns:
+            return 0
+        drop = [k for k in self._entries
+                if isinstance(k, tuple) and len(k) > 1 and int(k[1]) in ns]
+        for k in drop:
+            del self._entries[k]
+        return len(drop)
+
     def put(self, key: Hashable, value: Any, node: Optional[int] = None
             ) -> bool:
         """Insert ``value`` if admission accepts ``node`` (default: the

@@ -42,7 +42,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.graph import CSRGraph, PaddedGraph
+from repro.core.graph import PaddedGraph
 from repro.engine import WalkEngine, WalkPlan
 from repro.serve.batcher import (DEFAULT_BUCKETS, DeadlineBatcher, Response,
                                  bucket_for)
@@ -95,18 +95,23 @@ def _rank_all_kernel(emb: jnp.ndarray, nodes: jnp.ndarray, k: int):
 
 
 class EmbeddingService:
-    """Resident-state serving over one graph + one embedding table."""
+    """Resident-state serving over one graph + one embedding table.
 
-    def __init__(self, graph: CSRGraph, emb, *,
+    ``graph`` is anything ``repro.data.open_graph`` accepts (spec string,
+    ``CSRGraph``, ``Dataset``, ``GraphStore``); the service holds the store
+    and supports zero-downtime edge deltas via :meth:`refresh`.
+    """
+
+    def __init__(self, graph, emb, *,
                  plan: Optional[WalkPlan] = None,
                  cache_size: int = 1024,
                  admission: Union[str, Admission, None] = "hot",
                  buckets: Sequence[int] = DEFAULT_BUCKETS,
                  linger_s: float = 0.0, margin_s: float = 0.0,
                  walk_seed: int = 0, clock=time.monotonic) -> None:
-        if isinstance(graph, str):
-            from repro.data.ingest import load_graph
-            graph = load_graph(graph)
+        from repro.data import open_graph
+        self.store = open_graph(graph)   # spec | CSRGraph | Dataset | store
+        graph = self.store.graph
         self.graph = graph
         self.plan = plan or WalkPlan(backend="reference")
         if self.plan.backend == "sharded" and jax.device_count() > 1:
@@ -157,13 +162,51 @@ class EmbeddingService:
     def from_node2vec(cls, graph, cfg, mesh=None, **kw) -> "EmbeddingService":
         """Run the full pipeline (walks -> SGNS) and serve the result."""
         from repro.core.node2vec import node2vec
-        if isinstance(graph, str):
-            from repro.data.ingest import load_graph
-            graph = load_graph(graph)
-        emb = node2vec(graph, cfg, mesh=mesh)
+        from repro.data import open_graph
+        store = open_graph(graph)
+        emb = node2vec(store.graph, cfg, mesh=mesh)
         plan = kw.pop("plan", None) or dataclasses.replace(
             cfg.plan(mesh), backend="reference")
-        return cls(graph, emb, plan=plan, **kw)
+        return cls(store, emb, plan=plan, **kw)
+
+    # ------------------------------------------------------------ refresh --
+    def refresh(self, deltas) -> dict:
+        """Apply edge deltas to the resident graph without taking the
+        service down: the store patches the host CSR, only the affected
+        rows of the resident ``PaddedGraph`` are respliced
+        (``repro.engine.update.patch_padded``), the per-window walk engines
+        are rebound to the new layout, and cached results keyed on affected
+        nodes are dropped. Unaffected nodes keep their device rows *and*
+        their cache entries.
+
+        Frozen across refreshes (rebuild the service to re-derive): the
+        admission predicate's degree snapshot and the embedding table —
+        deltas move the graph, not the trained SGNS table, so walk-window
+        embeddings of affected nodes change only through their walk
+        context. Returns a report dict (patch + device accounting).
+        """
+        from repro.engine.update import patch_padded
+        patch = self.store.apply(deltas)
+        self.graph = self.store.graph
+        aff = patch.affected
+        self._pg, relayout, hot_rows = patch_padded(
+            self._pg, self.graph, aff, self.plan.cap, self.plan.hot_cap)
+        # per-window engines hold the old PaddedGraph; rebind lazily
+        self._engines.clear()
+        # rank candidate width only ever grows: compiled rank-kernel shapes
+        # stay valid and new, longer neighbor rows still fit
+        self._cand_width = max(self._cand_width, self.graph.max_degree, 1)
+        dropped = self.cache.invalidate_nodes(aff)
+        return {
+            "version": self.store.version,
+            "relayout": relayout,
+            "num_affected": int(patch.num_affected),
+            "delta_edges": int(patch.delta_edges),
+            "invalidated_fraction":
+                1.0 if relayout else float(patch.shard_fraction),
+            "hot_rows_updated": int(hot_rows),
+            "cache_entries_dropped": int(dropped),
+        }
 
     def _engine_for(self, window: int) -> WalkEngine:
         eng = self._engines.get(window)

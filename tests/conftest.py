@@ -2,19 +2,20 @@
 distributed tests spawn subprocesses that set the device count themselves.
 
 Fixtures resolve through the dataset registry so every test run exercises
-the ``load_graph`` spec path (bit-identical to calling ``repro.core.rmat``
+the ``open_graph`` spec path (bit-identical to calling ``repro.core.rmat``
 directly — asserted in tests/test_ingest.py)."""
 import numpy as np
 import pytest
 
-from repro.data.ingest import load_graph
+from repro.data import open_graph
 
 
 @pytest.fixture(scope="session")
 def small_graph():
-    return load_graph("wec:k=8,deg=12,seed=1")          # 256 vertices
+    return open_graph("wec:k=8,deg=12,seed=1").graph    # 256 vertices
 
 
 @pytest.fixture(scope="session")
 def skewed_graph():
-    return load_graph("skew:s=4,k=9,deg=20,seed=3")     # 512 vertices, skewed
+    # 512 vertices, skewed degrees
+    return open_graph("skew:s=4,k=9,deg=20,seed=3").graph

@@ -1,0 +1,429 @@
+"""Delta ingestion layer: DeltaBatch, apply_delta_csr, GraphStore (ISSUE 9).
+
+The tentpole guarantee at the host level: applying a DeltaBatch through the
+shard-local CSR patch produces exactly the graph a dict-of-dicts oracle
+computes, touching only the shards the batch's rows live in — in-place when
+edge counts are conserved, shard-local rebuild otherwise, never a
+whole-graph re-sort. GraphStore wraps that with versioning, relabel id
+mapping, and csr-directory persistence.
+"""
+import os
+import warnings
+
+import numpy as np
+import pytest
+
+from repro.core.graph import CSRGraph
+from repro.core.walk import reset_deprecation_warnings
+from repro.data import open_graph
+from repro.data.deltas import DeltaBatch, apply_delta_csr, zipf_churn
+from repro.data.ingest import (Dataset, _edgelist_cache_key, _load_dataset,
+                               load_dataset, load_graph)
+from repro.data.store import GraphStore
+
+SPEC = "wec:k=6,deg=8,seed=1"          # 64 vertices, cheap
+
+
+# --------------------------------------------------------------------------
+# DeltaBatch.build normalization
+# --------------------------------------------------------------------------
+
+@pytest.mark.parametrize("bad", [0.0, -1.0, np.nan, np.inf])
+def test_build_rejects_bad_weights(bad):
+    with pytest.raises(ValueError, match="finite and > 0"):
+        DeltaBatch.build(add=([0, 1], [2, 3], [1.0, bad]))
+
+
+def test_build_rejects_length_mismatch():
+    with pytest.raises(ValueError, match="length mismatch"):
+        DeltaBatch.build(add=([0, 1], [2]))
+
+
+def test_build_drops_self_loops():
+    b = DeltaBatch.build(add=([0, 3, 1], [0, 3, 2]), remove=([5], [5]))
+    assert b.num_add == 2               # only (1, 2) survives, symmetrized
+    assert b.num_remove == 0
+    assert set(zip(b.add_src.tolist(), b.add_dst.tolist())) == {(1, 2), (2, 1)}
+
+
+def test_build_symmetrizes_by_default():
+    b = DeltaBatch.build(add=([4], [7], [2.5]), remove=([1], [2]))
+    assert set(zip(b.add_src.tolist(), b.add_dst.tolist())) == {(4, 7), (7, 4)}
+    assert np.all(b.add_wgt == np.float32(2.5))
+    assert set(zip(b.rem_src.tolist(), b.rem_dst.tolist())) == {(1, 2), (2, 1)}
+    d = DeltaBatch.build(add=([4], [7]), undirected=False)
+    assert list(zip(d.add_src.tolist(), d.add_dst.tolist())) == [(4, 7)]
+
+
+def test_build_dedups_last_occurrence_wins():
+    b = DeltaBatch.build(add=([0, 0, 0], [1, 1, 1], [1.0, 2.0, 3.0]))
+    assert b.num_add == 2               # (0,1) + (1,0), deduped
+    assert np.all(b.add_wgt == np.float32(3.0))
+    r = DeltaBatch.build(remove=([2, 2], [5, 5]))
+    assert r.num_remove == 2            # (2,5) + (5,2)
+
+
+def test_build_sorted_per_src():
+    b = DeltaBatch.build(add=([9, 1, 5, 1], [0, 8, 2, 3]), undirected=False)
+    key = b.add_src * 100 + b.add_dst
+    assert np.all(np.diff(key) > 0)
+
+
+def test_check_rejects_out_of_range_ids():
+    b = DeltaBatch.build(add=([0], [63]))
+    b.check(64)                          # fits
+    with pytest.raises(ValueError, match="outside"):
+        b.check(63)
+
+
+def test_num_edges_counts_both_directions():
+    b = DeltaBatch.build(add=([0], [1]), remove=([2], [3]))
+    assert b.num_edges == b.num_add + b.num_remove == 4
+
+
+# --------------------------------------------------------------------------
+# apply_delta_csr vs a dict-of-dicts oracle
+# --------------------------------------------------------------------------
+
+def _to_dict(g: CSRGraph):
+    d = [dict() for _ in range(g.n)]
+    for u in range(g.n):
+        lo, hi = int(g.row_ptr[u]), int(g.row_ptr[u + 1])
+        for v, w in zip(np.asarray(g.col[lo:hi]), np.asarray(g.wgt[lo:hi])):
+            d[u][int(v)] = np.float32(w)
+    return d
+
+
+def _oracle_apply(d, batch: DeltaBatch):
+    """Removals first, then upserts — the documented batch semantics."""
+    removed = missing = 0
+    for u, v in zip(batch.rem_src.tolist(), batch.rem_dst.tolist()):
+        if v in d[u]:
+            del d[u][v]
+            removed += 1
+        else:
+            missing += 1
+    updated = added = 0
+    for u, v, w in zip(batch.add_src.tolist(), batch.add_dst.tolist(),
+                       batch.add_wgt.tolist()):
+        if v in d[u]:
+            updated += 1
+        else:
+            added += 1
+        d[u][v] = np.float32(w)
+    return removed, missing, updated, added
+
+
+def _assert_matches_oracle(g: CSRGraph, d):
+    assert g.m == sum(len(row) for row in d)
+    for u in range(g.n):
+        lo, hi = int(g.row_ptr[u]), int(g.row_ptr[u + 1])
+        cols = np.asarray(g.col[lo:hi])
+        assert np.all(np.diff(cols) > 0), f"row {u} not sorted-unique"
+        assert cols.tolist() == sorted(d[u])
+        assert np.asarray(g.wgt[lo:hi]).tolist() == \
+            [float(d[u][int(v)]) for v in cols]
+
+
+def _random_batch(g: CSRGraph, rng, n_add=20, n_rem=15):
+    """adds mix fresh pairs with weight bumps; removals hit real edges."""
+    e = rng.choice(g.m, size=n_rem, replace=False)
+    rem_src = np.searchsorted(np.asarray(g.row_ptr), e, side="right") - 1
+    rem_dst = np.asarray(g.col)[e].astype(np.int64)
+    add_src = rng.integers(0, g.n, size=n_add)
+    add_dst = rng.integers(0, g.n, size=n_add)
+    add_w = rng.uniform(0.5, 2.0, size=n_add).astype(np.float32)
+    return DeltaBatch.build(add=(add_src, add_dst, add_w),
+                            remove=(rem_src, rem_dst))
+
+
+@pytest.mark.parametrize("seed", range(5))
+@pytest.mark.parametrize("num_shards", [1, 7, 64])
+def test_apply_matches_dict_oracle(seed, num_shards):
+    g = open_graph(SPEC).graph
+    d = _to_dict(g)
+    rng = np.random.default_rng(seed)
+    for _ in range(2):                  # sequential batches compose
+        batch = _random_batch(g, rng)
+        rm, ms, up, ad = _oracle_apply(d, batch)
+        g, rep = apply_delta_csr(g, batch, num_shards=num_shards)
+        assert (rep.edges_removed, rep.removed_missing,
+                rep.edges_updated, rep.edges_added) == (rm, ms, up, ad)
+        assert rep.m_after == g.m
+        _assert_matches_oracle(g, d)
+        # the invalidation contract: affected == exactly the delta rows
+        rows = np.unique(np.concatenate([batch.add_src, batch.rem_src]))
+        assert np.array_equal(rep.affected, rows)
+        assert np.array_equal(rep.affected_shards,
+                              np.unique(rows // rep.n_local))
+
+
+def test_empty_batch_is_identity():
+    g = open_graph(SPEC).graph
+    out, rep = apply_delta_csr(g, DeltaBatch.build())
+    assert out is g
+    assert rep.num_affected == 0 and rep.delta_edges == 0 and rep.in_place
+    assert rep.shard_fraction == 0.0
+
+
+def test_weight_only_update_splices_in_place():
+    g = open_graph(SPEC).graph
+    u = int(np.argmax(g.deg))
+    nb = g.neighbors(u)[:3].astype(np.int64)
+    batch = DeltaBatch.build(add=(np.full(3, u), nb, np.full(3, 9.0)))
+    col_buf = g.col                      # the arrays themselves must be kept
+    out, rep = apply_delta_csr(g, batch)
+    assert out is g and rep.in_place
+    assert out.col is col_buf
+    assert rep.edges_updated == batch.num_add and rep.edges_added == 0
+    lo = int(g.row_ptr[u])
+    row = dict(zip(np.asarray(g.col[lo:lo + int(g.deg[u])]).tolist(),
+                   np.asarray(g.wgt[lo:lo + int(g.deg[u])]).tolist()))
+    assert all(row[int(v)] == 9.0 for v in nb)
+
+
+def test_allow_in_place_false_copies():
+    g = open_graph(SPEC).graph
+    u = int(np.argmax(g.deg))
+    v = int(g.neighbors(u)[0])
+    batch = DeltaBatch.build(add=([u], [v], [9.0]))
+    out, rep = apply_delta_csr(g, batch, allow_in_place=False)
+    assert out is not g and not rep.in_place
+    assert float(np.asarray(g.wgt)[int(g.row_ptr[u])
+                                   + g.neighbors(u).tolist().index(v)]) != 9.0
+
+
+def test_readonly_arrays_fall_back_out_of_place():
+    g = open_graph(SPEC).graph
+    for a in (g.row_ptr, g.col, g.wgt):
+        a.flags.writeable = False
+    before = (g.col.copy(), g.wgt.copy(), g.row_ptr.copy())
+    u = int(np.argmax(g.deg))
+    nb = g.neighbors(u)[:2].astype(np.int64)
+    out, rep = apply_delta_csr(
+        g, DeltaBatch.build(add=(np.full(2, u), nb, np.full(2, 3.0))))
+    assert out is not g and not rep.in_place
+    assert np.array_equal(g.col, before[0])       # source untouched
+    assert np.array_equal(g.wgt, before[1])
+    assert np.array_equal(g.row_ptr, before[2])
+    assert float(out.wgt[int(out.row_ptr[u])
+                         + out.neighbors(u).tolist().index(int(nb[0]))]) == 3.0
+
+
+def test_growth_rebuild_only_touches_affected_shards():
+    """Out-of-place path: unaffected shards are block copies of the source
+    (identical bytes), only affected shards' segments differ."""
+    g = open_graph(SPEC).graph
+    u = 5
+    fresh = [v for v in range(g.n) if v != u
+             and v not in set(g.neighbors(u).tolist())][:4]
+    out, rep = apply_delta_csr(
+        g, DeltaBatch.build(add=(np.full(4, u), fresh)), num_shards=16)
+    assert not rep.in_place and rep.m_after == g.m + 8
+    aff = set(rep.affected_shards.tolist())
+    n_local = rep.n_local
+    for s in range(rep.num_shards):
+        lo_v, hi_v = s * n_local, min((s + 1) * n_local, g.n)
+        if s in aff or hi_v <= lo_v:
+            continue
+        src = slice(int(g.row_ptr[lo_v]), int(g.row_ptr[hi_v]))
+        dst = slice(int(out.row_ptr[lo_v]), int(out.row_ptr[hi_v]))
+        assert np.array_equal(np.asarray(g.col[src]),
+                              np.asarray(out.col[dst]))
+        assert np.array_equal(np.asarray(g.wgt[src]),
+                              np.asarray(out.wgt[dst]))
+
+
+# --------------------------------------------------------------------------
+# GraphStore: versioning, relabel mapping, persistence
+# --------------------------------------------------------------------------
+
+def test_store_version_bumps_per_batch():
+    st = open_graph(SPEC)
+    assert st.version == 0
+    st.apply(DeltaBatch.build(add=([0], [9], [1.5])))
+    assert st.version == 1
+    rep = st.apply([DeltaBatch.build(add=([1], [9])),
+                    DeltaBatch.build(remove=([1], [9]))])
+    assert st.version == 3
+    assert rep.edges_added == 2 and rep.edges_removed == 2   # merged report
+    assert st.last_report is rep
+
+
+def test_store_rejects_stale_base_version():
+    st = open_graph(SPEC)
+    pinned = DeltaBatch.build(add=([0], [1]), base_version=0)
+    st.apply(pinned)                    # matches version 0
+    with pytest.raises(ValueError, match="stale"):
+        st.apply(DeltaBatch.build(add=([2], [3]), base_version=0))
+
+
+def test_store_apply_input_validation():
+    st = open_graph(SPEC)
+    with pytest.raises(TypeError, match="DeltaBatch"):
+        st.apply([("not", "a", "batch")])
+    with pytest.raises(ValueError, match="at least one"):
+        st.apply([])
+
+
+def test_store_meta():
+    st = open_graph(SPEC)
+    m = st.meta
+    assert m["spec"] == SPEC and m["version"] == 0
+    assert m["n"] == st.graph.n and m["m"] == st.graph.m
+    assert m["relabeled"] is False and m["has_labels"] is False
+
+
+def test_open_graph_accepts_every_source_kind():
+    st = open_graph(SPEC)
+    assert open_graph(st) is st                       # passthrough
+    g = st.graph
+    st2 = open_graph(g)
+    assert st2.graph is g and st2.perm is None
+    ds = _load_dataset(SPEC)
+    assert open_graph(ds).graph is ds.graph
+    with pytest.raises(TypeError, match="spec string"):
+        open_graph(123)
+
+
+def test_relabel_store_remaps_deltas_through_frozen_perm():
+    st = open_graph(SPEC + ",relabel=degree")
+    perm = st.perm
+    assert perm is not None and st.meta["relabeled"]
+    u, v = 3, 11                                      # ORIGINAL ids
+    rep = st.apply(DeltaBatch.build(add=([u], [v], [7.0])))
+    pu, pv = int(perm[u]), int(perm[v])
+    assert set(rep.affected.tolist()) == {pu, pv}     # internal-id space
+    row = st.graph.neighbors(pu)
+    lo = int(st.graph.row_ptr[pu])
+    w = float(np.asarray(st.graph.wgt)[lo + row.tolist().index(pv)])
+    assert w == 7.0
+
+
+def test_remap_resorts_after_permutation():
+    """Regression: a degree relabel can invert id order, so remap must
+    re-sort — apply_delta_csr slices the batch per shard by searchsorted
+    on src and silently corrupts on unsorted input."""
+    b = DeltaBatch.build(add=([0, 1], [2, 3], [1.0, 2.0]),
+                         remove=([0], [3]))
+    perm = np.array([9, 8, 7, 6, 5, 4, 3, 2, 1, 0], np.int64)  # reverse
+    r = b.remap(perm)
+    for s, d in ((r.add_src, r.add_dst), (r.rem_src, r.rem_dst)):
+        key = s * 10 + d
+        assert np.all(np.diff(key) > 0)
+    # weights followed their edges through the re-sort
+    w = dict(zip(zip(r.add_src.tolist(), r.add_dst.tolist()),
+                 r.add_wgt.tolist()))
+    assert w[(9, 7)] == 1.0 and w[(8, 6)] == 2.0
+
+
+def test_cache_key_folds_graph_version(tmp_path):
+    p = tmp_path / "edges.txt"
+    p.write_text("0 1\n1 2\n")
+    k0 = _edgelist_cache_key(str(p), {}, graph_version=0)
+    assert _edgelist_cache_key(str(p), {}, graph_version=0) == k0
+    assert _edgelist_cache_key(str(p), {}, graph_version=1) != k0
+    assert _edgelist_cache_key(str(p), {"relabel": "degree"}) != k0
+
+
+def test_store_save_reopen_roundtrip(tmp_path):
+    st = open_graph(SPEC + ",relabel=degree")
+    st.apply(DeltaBatch.build(add=([0], [5], [2.0])))
+    st.apply(DeltaBatch.build(remove=([0], [5])))
+    d = st.save(str(tmp_path / "g"))
+
+    st2 = open_graph(f"csr:{d}")
+    assert st2.version == st.version == 2
+    assert np.array_equal(st2.perm, st.perm)
+    assert np.array_equal(np.asarray(st2.graph.row_ptr),
+                          np.asarray(st.graph.row_ptr))
+    assert np.array_equal(np.asarray(st2.graph.col),
+                          np.asarray(st.graph.col))
+    assert np.array_equal(np.asarray(st2.graph.wgt),
+                          np.asarray(st.graph.wgt))
+    # memmapped reload is read-only: further deltas must fall back to the
+    # out-of-place path, not crash on the splice
+    u = int(np.argmax(st2.graph.deg))
+    v = int(st2.graph.neighbors(u)[0])
+    rep = st2.apply(DeltaBatch.build(add=([u], [v], [4.0])))
+    assert not rep.in_place and st2.version == 3
+
+
+def test_store_save_restores_labels(tmp_path):
+    st = open_graph("sbm:n=60,c=3,pin=0.2,pout=0.02,seed=1")
+    assert st.labels is not None
+    d = st.save(str(tmp_path / "g"))
+    st2 = open_graph(f"csr:{d}")
+    assert np.array_equal(np.asarray(st2.labels), np.asarray(st.labels))
+
+
+# --------------------------------------------------------------------------
+# deprecated one-shot shims
+# --------------------------------------------------------------------------
+
+@pytest.mark.parametrize("shim", [load_graph, load_dataset])
+def test_legacy_loaders_warn_once_pointing_at_open_graph(shim):
+    reset_deprecation_warnings()
+    with pytest.warns(DeprecationWarning, match="open_graph"):
+        shim(SPEC)
+    with warnings.catch_warnings():
+        warnings.simplefilter("error")
+        shim(SPEC)                       # second call: silent
+    reset_deprecation_warnings()
+
+
+def test_legacy_loaders_still_return_the_goods():
+    reset_deprecation_warnings()
+    with pytest.warns(DeprecationWarning):
+        g = load_graph(SPEC)
+    assert isinstance(g, CSRGraph)
+    reset_deprecation_warnings()
+    with pytest.warns(DeprecationWarning):
+        ds = load_dataset(SPEC)
+    assert isinstance(ds, Dataset) and ds.graph.n == g.n
+    reset_deprecation_warnings()
+
+
+# --------------------------------------------------------------------------
+# zipf churn stream
+# --------------------------------------------------------------------------
+
+def test_zipf_churn_yields_valid_applicable_batches():
+    st = open_graph(SPEC)
+    n = st.graph.n
+    batches = list(zipf_churn(st.graph, num_batches=4, batch_edges=10,
+                              seed=3))
+    assert len(batches) == 4
+    for b in batches:
+        b.check(n)                       # endpoints in range
+        assert b.num_edges > 0
+        rep = st.apply(b)                # applies cleanly, graph stays valid
+        assert rep.m_after == st.graph.m
+    for u in range(n):                   # rows still sorted-unique
+        lo, hi = int(st.graph.row_ptr[u]), int(st.graph.row_ptr[u + 1])
+        assert np.all(np.diff(np.asarray(st.graph.col[lo:hi])) > 0)
+
+
+def test_zipf_churn_top_confines_shard_invalidation():
+    """top=K on a degree-relabeled graph keeps every event inside the id
+    prefix [0, K) — the property the update benchmark's <=10%-of-shards
+    gate is built on (deg non-increasing => stable degree rank == id)."""
+    g = open_graph("wec:k=8,deg=12,seed=1,relabel=degree").graph
+    st = open_graph(g)                   # raw CSRGraph: no second remap
+    K = 32
+    for b in zipf_churn(g, num_batches=3, batch_edges=12, seed=5, top=K):
+        for a in (b.add_src, b.add_dst, b.rem_src, b.rem_dst):
+            assert a.size == 0 or int(a.max()) < K
+        rep = st.apply(b)
+        assert int(rep.affected.max()) < K
+        assert rep.shard_fraction <= -(-K // rep.n_local) / rep.num_shards
+
+
+def test_zipf_churn_weight_updates_flag():
+    g = open_graph(SPEC).graph
+    st = open_graph(g)
+    (b,) = list(zipf_churn(g, num_batches=1, batch_edges=8, seed=2,
+                           add_fraction=1.0, weight_updates=False))
+    rep = st.apply(b)
+    assert rep.edges_updated == 0        # adds avoid live edges
+    assert rep.edges_added == b.num_add

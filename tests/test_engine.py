@@ -1,4 +1,4 @@
-"""Unified WalkEngine API: backend parity, stats, rounds, shims, validation.
+"""Unified WalkEngine API: backend parity, stats, rounds, validation.
 
 The tri-backend parity tests are the PR's core guarantee: one WalkPlan +
 seed -> bit-identical walks on `reference`, `sharded` (fake devices, run in
@@ -17,7 +17,6 @@ import pytest
 
 from repro.core import rmat
 from repro.core.graph import PaddedGraph
-from repro.core.walk import WalkParams, simulate_walks
 from repro.engine import WalkEngine, WalkPlan, WalkStats, round_seed
 
 
@@ -254,17 +253,17 @@ def test_engine_stats_structure(small_graph):
     assert res.walks.shape == (small_graph.n, 4)
 
 
-def test_deprecated_shim_matches_engine(small_graph):
-    from repro.core.walk import reset_deprecation_warnings
+def test_build_accepts_prebuilt_padded_graph(small_graph):
+    """A prebuilt PaddedGraph binds directly (no store, no repack) and
+    walks identically to building from the CSR at the same plan."""
     pg = PaddedGraph.build(small_graph, cap=16)
-    params = WalkParams(p=0.5, q=2.0, length=6)
-    reset_deprecation_warnings()       # the shim warning is one-shot
-    with pytest.deprecated_call():
-        shim = np.asarray(simulate_walks(pg, np.arange(small_graph.n), 3,
-                                         params))
-    eng = WalkEngine.build(small_graph,
-                           WalkPlan(p=0.5, q=2.0, length=6, cap=16))
-    assert np.array_equal(shim, eng.run(seed=3).walks)
+    plan = WalkPlan(p=0.5, q=2.0, length=6, cap=16)
+    direct = WalkEngine.build(pg, plan)
+    assert direct.store is None
+    via_csr = WalkEngine.build(small_graph, plan)
+    assert via_csr.store is not None
+    assert np.array_equal(direct.run(seed=3).walks,
+                          via_csr.run(seed=3).walks)
 
 
 def test_custom_starts_and_walker_ids(small_graph):

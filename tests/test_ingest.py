@@ -21,10 +21,15 @@ from repro.core import rmat
 from repro.core.graph import CSRGraph, PaddedGraph
 from repro.core.walk_distributed import ShardedGraph
 from repro.data import ingest
-from repro.data.ingest import (csr_from_chunks, edgelist_to_csr, load_csr,
-                               load_dataset, load_graph, parse_spec,
+from repro.data.ingest import (_load_dataset as load_dataset, csr_from_chunks,
+                               edgelist_to_csr, load_csr, parse_spec,
                                relabel_by_degree, save_csr, write_edgelist)
 from repro.engine import WalkEngine, WalkPlan
+
+
+def load_graph(spec, cache_dir=None):
+    # the non-deprecated spelling of the old load_graph helper
+    return load_dataset(spec, cache_dir=cache_dir).graph
 
 
 def _pair_weights(src, dst):

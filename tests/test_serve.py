@@ -7,7 +7,7 @@ whole serve stack, so these tests are deterministic under any machine load.
 import numpy as np
 import pytest
 
-from repro.data.ingest import load_graph
+from repro.data import open_graph
 from repro.engine import WalkPlan
 from repro.serve import (DeadlineBatcher, EmbeddingService, ResultCache,
                          VirtualClock, hot_set_admission, prefix_admission,
@@ -19,7 +19,7 @@ CAP = 24
 @pytest.fixture(scope="module")
 def graph():
     # relabel=degree: vertex id == degree rank, hot set == id prefix
-    return load_graph("skew:s=4,k=9,deg=20,seed=3,relabel=degree")
+    return open_graph("skew:s=4,k=9,deg=20,seed=3,relabel=degree").graph
 
 
 def _emb(n, dim=16, seed=0):

@@ -36,8 +36,8 @@ def _cfg(**kw):
 
 @pytest.fixture(scope="module")
 def tiny_graph():
-    from repro.data.ingest import load_graph
-    return load_graph("wec:k=7,deg=10,seed=1")      # 128 vertices
+    from repro.data import open_graph
+    return open_graph("wec:k=7,deg=10,seed=1").graph    # 128 vertices
 
 
 # ------------------------------------------------------------ pair gen --

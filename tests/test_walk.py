@@ -1,14 +1,24 @@
 """Reference walk engine: validity, layout-invariance, sampling correctness."""
-import jax.numpy as jnp
 import numpy as np
 import pytest
 
 from repro.core import rmat
 from repro.core.graph import CSRGraph, PaddedGraph
 from repro.core.transition import brute_force_probs
-from repro.core.walk import WalkParams, simulate_walks
+from repro.core.walk import WalkParams
+from repro.engine import WalkEngine, WalkPlan
 
 PARAMS = WalkParams(p=0.5, q=2.0, length=12)
+
+
+def simulate_walks(pg, starts, seed, params, walker_ids=None):
+    """Reference-backend walks via the engine (the pre-PR 9 shim's shape:
+    walker ids default to walker *position*, not start vertex)."""
+    starts = np.asarray(starts, np.int32)
+    ids = np.arange(len(starts), dtype=np.int32) if walker_ids is None \
+        else np.asarray(walker_ids, np.int32)
+    eng = WalkEngine.build(pg, WalkPlan.from_params(params))
+    return eng.run(starts=starts, seed=seed, walker_ids=ids).walks
 
 
 def _check_valid(g, walks):
@@ -94,7 +104,7 @@ def test_first_step_distribution(small_graph):
     nb, w = g.neighbors(v), g.weights(v)
     pg = PaddedGraph.build(g)
     starts = np.full(6000, v, np.int32)
-    walker_ids = jnp.arange(6000, dtype=jnp.int32)
+    walker_ids = np.arange(6000, dtype=np.int32)
     walks = np.asarray(simulate_walks(pg, starts, 0,
                                       WalkParams(length=1),
                                       walker_ids=walker_ids))
@@ -111,7 +121,7 @@ def test_second_step_distribution():
     starts = np.full(8000, v, np.int32)
     walks = np.asarray(simulate_walks(
         pg, starts, 3, WalkParams(p=p, q=q, length=2),
-        walker_ids=jnp.arange(8000, dtype=jnp.int32)))
+        walker_ids=np.arange(8000, dtype=np.int32)))
     # group by first step u' (walk v -> u' -> x); compare x frequencies
     first, second = walks[:, 0], walks[:, 1]
     for uprime in np.unique(first)[:3]:
@@ -135,22 +145,3 @@ def test_spark_trim_baseline_changes_walks(skewed_graph):
     assert counts.max() <= 5
     # trimmed walks never use edges outside the trimmed graph
     _check_valid(trimmed, walks)
-
-
-def test_deprecation_warning_fires_exactly_once():
-    """simulate_walks warns once per process, not once per call."""
-    import warnings as _warnings
-
-    from repro.core.walk import reset_deprecation_warnings
-
-    g = rmat.wec(5, avg_degree=4, seed=0)
-    pg = PaddedGraph.build(g)
-    starts = np.arange(8)
-    reset_deprecation_warnings()
-    with _warnings.catch_warnings(record=True) as caught:
-        _warnings.simplefilter("always")
-        simulate_walks(pg, starts, 0, WalkParams(length=4))
-        simulate_walks(pg, starts, 1, WalkParams(length=4))
-    dep = [w for w in caught if issubclass(w.category, DeprecationWarning)]
-    assert len(dep) == 1
-    assert "WalkEngine.build" in str(dep[0].message)

@@ -15,20 +15,18 @@ SCRIPT = textwrap.dedent("""
     import numpy as np, jax
     from jax.sharding import Mesh
     from repro.core import rmat
-    from repro.core.graph import PaddedGraph
-    from repro.core.walk import WalkParams, simulate_walks
-    from repro.core.walk_distributed import distributed_walks
+    from repro.engine import WalkEngine, WalkPlan
 
     g = rmat.{family}
-    pg = PaddedGraph.build(g, cap={cap})
-    params = WalkParams(p={p}, q={q}, length=10, mode="{mode}",
-                        approx_eps=5e-2)
-    ref = np.asarray(simulate_walks(pg, np.arange(g.n), seed=3,
-                                    params=params))
+    plan = WalkPlan(p={p}, q={q}, length=10, mode="{mode}",
+                    approx_eps=5e-2, cap={cap})
+    ref = WalkEngine.build(g, plan).run(seed=3).walks
     mesh = Mesh(np.array(jax.devices()), ("rw",))
-    walks, drops = distributed_walks(pg, mesh, seed=3, params=params)
-    assert drops == 0, drops
-    assert np.array_equal(ref, np.asarray(walks)[:g.n]), "walks differ"
+    import dataclasses
+    sh = WalkEngine.build(g, dataclasses.replace(plan, backend="sharded"),
+                          mesh=mesh).run(seed=3)
+    assert sh.stats.dropped == 0, sh.stats.dropped
+    assert np.array_equal(ref, sh.walks[:g.n]), "walks differ"
     print("OK", ref.shape)
 """)
 
