@@ -1,4 +1,5 @@
-.PHONY: ci fast smoke lint serve-smoke train-smoke update-smoke bench \
+.PHONY: ci fast smoke lint serve-smoke train-smoke train-shard-smoke \
+	update-smoke bench \
 	bench-smoke bench-baseline
 
 ci:            ## tier-1: full test suite (the per-PR bar; nightly in CI)
@@ -18,6 +19,9 @@ serve-smoke:   ## serving end-to-end + gated serve_* ratios vs baseline
 
 train-smoke:   ## streamed walk→SGNS parity battery + gated train_* ratios
 	scripts/ci.sh train-smoke
+
+train-shard-smoke: ## sharded SGNS parity battery + gated train_shard_* ratios
+	scripts/ci.sh train-shard-smoke
 
 update-smoke:  ## delta/engine.update parity battery + gated update_* ratios
 	scripts/ci.sh update-smoke

@@ -3,7 +3,12 @@ FN-Approx vs the Spark trim-30 baseline.
 
 BlogCatalog is not available offline; a labeled SBM graph reproduces the
 qualitative claim: the trim baseline destroys accuracy while FN-Approx
-matches FN-Exact. Derived column: micro-F1 / macro-F1 on a 50% split."""
+matches FN-Exact. Derived column: micro-F1 / macro-F1 on a 50% split.
+
+``accuracy_budget_r{R}`` rows sweep the walk budget (num_walks rounds at a
+fixed length): how much corpus the downstream task actually needs, i.e.
+where the F1-vs-walk-budget curve flattens. Recorded in EXPERIMENTS.md
+§Accuracy — the knee is what sizes the streamed trainer's round count."""
 from __future__ import annotations
 
 import numpy as np
@@ -67,6 +72,18 @@ def run():
     micro, macro = _f1(emb, labels)
     row("accuracy_spark_trim", 0.0, f"micro_f1={micro:.3f};"
                                     f"macro_f1={macro:.3f}")
+
+    # F1 vs walk budget: same graph/config, num_walks swept. One full-budget
+    # corpus is generated once per budget (not prefix-sliced) so each point
+    # is exactly what a run configured with that budget would produce.
+    for budget in (1, 2, 4, 8):
+        cfg = Node2VecConfig(mode="exact", **{**base, "num_walks": budget})
+        walks = generate_walks(g, cfg)
+        emb = train_embeddings(g, walks, cfg)
+        micro, macro = _f1(emb, labels)
+        row(f"accuracy_budget_r{budget}", 0.0,
+            f"walks={walks.shape[0]};micro_f1={micro:.3f};"
+            f"macro_f1={macro:.3f}")
 
 
 if __name__ == "__main__":

@@ -24,10 +24,26 @@ Smoke mode (``--smoke [out.json]``) merges **ratio** metrics into the
                                       autodiff (interpret mode off-TPU, so
                                       > 1 here; on TPU the kernel is the
                                       arithmetic-intensity floor).
+* ``train_shard_pairs_ratio``       — sharded-trainer (2 table shards)
+                                      pairs/sec over the dense single-device
+                                      trainer on the same rounds, measured
+                                      in a 2-virtual-device subprocess on a
+                                      vocabulary whose tables fit either
+                                      way. The ISSUE-10 acceptance gate
+                                      asserts >= 1.5x: the win is lazy
+                                      row-Adam's O(rows·D) step vs dense
+                                      Adam's O(V·D), not fake-device
+                                      parallelism (one physical core here).
+* ``train_shard_bit_identical``     — 1.0 iff the sharded trainer at 2
+                                      shards reproduces the 1-shard run bit
+                                      for bit (embeddings + loss history),
+                                      jnp and fused backends.
 """
 from __future__ import annotations
 
 import json
+import os
+import subprocess
 import sys
 import time
 
@@ -106,6 +122,102 @@ def _step_us(backend: str, cfg) -> float:
     return time_fn(chain, warmup=1, iters=3) / 5
 
 
+# Runs in a 2-virtual-device subprocess (XLA_FLAGS in the parent env):
+# times the dense single-device trainer vs the sharded trainer at 1 and 2
+# table shards on identical synthetic rounds, and checks S=1 vs S=2
+# bit-identity (embeddings + loss history, jnp and fused) on a small odd
+# vocabulary so the pad-row path is exercised. Emits one "RESULT {json}"
+# line. V=65536 makes dense Adam's O(V*D) per-step table work dominate,
+# which is exactly the cost the lazy row-Adam path avoids.
+_SHARD_SCRIPT = r"""
+import json, sys, time
+import numpy as np
+import jax
+
+from repro.launch.mesh import make_table_mesh
+from repro.train import StreamingSGNSTrainer, train_epoch_sharded
+
+assert jax.device_count() >= 2, jax.devices()
+
+V, D, B, K, WINDOW = 65536, 64, 1024, 5, 4
+ROUNDS, WALKERS, STEPS = 3, 1024, 9
+rng = np.random.default_rng(0)
+rounds = [np.asarray(rng.integers(0, V, (WALKERS, STEPS)), np.int32)
+          for _ in range(ROUNDS)]
+
+
+def trainer(**kw):
+    return StreamingSGNSTrainer(V, dim=D, window=WINDOW, negatives=K,
+                                batch_size=B, record_loss=False, **kw)
+
+
+def timed(make):
+    t0 = time.perf_counter()
+    _, st = make().train(iter(rounds))
+    return time.perf_counter() - t0, st
+
+
+mk_dense = lambda: trainer()
+mk_s1 = lambda: trainer(shard_tables=True, mesh=make_table_mesh(max_shards=1))
+mk_s2 = lambda: trainer(shard_tables=True, mesh=make_table_mesh(max_shards=2))
+
+for mk in (mk_dense, mk_s1, mk_s2):   # warmup: compile every program
+    timed(mk)
+t_d, t_1, t_2, st2 = [], [], [], None
+for _ in range(2):                    # interleaved passes; load cancels
+    t_d.append(timed(mk_dense)[0])
+    t_1.append(timed(mk_s1)[0])
+    dt, st2 = timed(mk_s2)
+    t_2.append(dt)
+pairs = st2.pairs
+
+# bit-identity battery: small odd vocab -> pad row live on both tables
+bit = 1.0
+for backend in ("jnp", "fused"):
+    embs, hists = [], []
+    for s in (1, 2):
+        tr = StreamingSGNSTrainer(
+            257, dim=16, window=3, negatives=3, batch_size=256,
+            sgns_backend=backend, shard_tables=True,
+            mesh=make_table_mesh(max_shards=s))
+        rng_b = np.random.default_rng(7)
+        emb, _ = tr.train(iter(
+            np.asarray(rng_b.integers(0, 257, (64, 9)), np.int32)
+            for _ in range(2)))
+        embs.append(np.asarray(emb))
+        hists.append(tr.loss_history())
+    if embs[0].tobytes() != embs[1].tobytes() or \
+            hists[0].tobytes() != hists[1].tobytes():
+        bit = 0.0
+        print(f"BIT MISMATCH backend={backend}", file=sys.stderr)
+
+print("RESULT " + json.dumps({
+    "pps_dense": pairs / min(t_d),
+    "pps_shard1": pairs / min(t_1),
+    "pps_shard2": pairs / min(t_2),
+    "bit_identical": bit,
+    "collective_bytes": st2.collective_bytes,
+    "compiles": train_epoch_sharded._cache_size(),
+}))
+"""
+
+
+def _shard_subprocess() -> dict | None:
+    """Run ``_SHARD_SCRIPT`` under 2 virtual CPU devices; None on failure."""
+    env = dict(os.environ,
+               XLA_FLAGS="--xla_force_host_platform_device_count=2")
+    env["PYTHONPATH"] = os.pathsep.join(
+        p for p in ("src", env.get("PYTHONPATH", "")) if p)
+    proc = subprocess.run([sys.executable, "-c", _SHARD_SCRIPT],
+                          capture_output=True, text=True, env=env)
+    if proc.returncode != 0:
+        sys.stderr.write(proc.stderr[-2000:])
+        return None
+    lines = [ln for ln in proc.stdout.splitlines()
+             if ln.startswith("RESULT ")]
+    return json.loads(lines[-1][len("RESULT "):]) if lines else None
+
+
 def _interleaved(g, cfg):
     """stream / concat-host / concat-dev, two interleaved passes each (min
     of the post-warmup passes; load cancels in the ratios)."""
@@ -138,6 +250,15 @@ def run() -> None:
     row("train_step_jnp", jnp_us, "")
     row("train_step_fused", fused_us,
         f"fused_over_jnp={fused_us / jnp_us:.2f}x (interpret off-TPU)")
+    res = _shard_subprocess()
+    if res is None:
+        row("train_shard2", 0, "subprocess_failed")
+        return
+    row("train_shard2", 0,
+        f"pairs_per_sec={res['pps_shard2']:.0f};"
+        f"over_dense={res['pps_shard2'] / res['pps_dense']:.2f}x;"
+        f"bit_identical={res['bit_identical']:.0f};"
+        f"collective_bytes={res['collective_bytes']}")
 
 
 def smoke_metrics(info: dict) -> dict:
@@ -159,11 +280,28 @@ def smoke_metrics(info: dict) -> dict:
     fused_us = _step_us("fused", cfg)
     info["train_step_jnp_us"] = jnp_us
     info["train_step_fused_us"] = fused_us
+    res = _shard_subprocess()
+    assert res is not None, "sharded 2-device subprocess failed"
+    ratio = res["pps_shard2"] / res["pps_dense"]
+    # ISSUE-10 acceptance gates, enforced here (not just by bench_compare
+    # drift): the sharded trainer must reproduce the 1-shard run bit for
+    # bit AND beat the dense trainer's pairs/sec by >= 1.5x on 2 devices.
+    assert res["bit_identical"] == 1.0, "sharded run not bit-identical"
+    assert ratio >= 1.5, f"shard2/dense pairs/sec {ratio:.2f} < 1.5"
+    info.update({
+        "train_shard_pps_dense": res["pps_dense"],
+        "train_shard_pps_shard1": res["pps_shard1"],
+        "train_shard_pps_shard2": res["pps_shard2"],
+        "train_shard_collective_bytes": res["collective_bytes"],
+        "train_shard_epoch_compiles": res["compiles"],
+    })
     return {
         "train_stream_over_concat_us": t_s / t_ch,
         "train_h2d_stream_over_concat":
             st.h2d_bytes / st.h2d_bytes_concat,
         "train_fused_over_jnp_step_us": fused_us / jnp_us,
+        "train_shard_pairs_ratio": ratio,
+        "train_shard_bit_identical": res["bit_identical"],
     }
 
 

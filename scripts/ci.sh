@@ -1,7 +1,7 @@
 #!/usr/bin/env bash
 # Tiered CI entry point.
 # Usage: scripts/ci.sh [tier1|fast|smoke|lint|serve-smoke|train-smoke|
-#                       update-smoke]
+#                       train-shard-smoke|update-smoke]
 #   tier1 (default) — the full suite, the bar every PR must hold.
 #                     Runtime varies 8 min - 2.5 h with machine load, so it
 #                     runs nightly / on demand, NOT per push.
@@ -15,6 +15,12 @@
 #   train-smoke     — streamed walk→SGNS training end-to-end: the train
 #                     parity battery, then bench_train --smoke gates the
 #                     train_* ratios against the committed baseline
+#   train-shard-smoke — sharded SGNS end-to-end: the shard parity battery
+#                     (incl. the 2-fake-device subprocess bit-identity
+#                     tests), then bench_train --smoke re-gates the
+#                     train_* ratios — including the ISSUE-10 acceptance
+#                     asserts (bit-identical across shard counts, shard2/
+#                     dense pairs/sec >= 1.5x) that run inside the bench
 #   update-smoke    — incremental graph updates end-to-end: the delta /
 #                     engine.update parity batteries, then bench_update
 #                     --smoke gates the update_* ratios (and the ISSUE-9
@@ -61,6 +67,23 @@ lint() {
     fail=1
   fi
 
+  # the streamed trainer's contract is "no host round-trips in the hot
+  # path" (DESIGN.md §14/§16): device syncs in src/repro/train/ must be
+  # per-round or terminal, and say so with a `# host-ok: ...` tag on the
+  # line. block_until_ready has no legitimate use there at all.
+  if grep -rn "\.block_until_ready()" src/repro/train/ --include="*.py"; then
+    echo "LINT FAIL: block_until_ready in the streamed trainer (host" \
+         "sync in the hot path); let dispatch run ahead instead" >&2
+    fail=1
+  fi
+  if grep -rnE "\bnp\.asarray|\bnp\.ascontiguousarray|jax\.device_get" \
+       src/repro/train/ --include="*.py" | grep -v "# host-ok"; then
+    echo "LINT FAIL: host round-trip in src/repro/train/ without a" \
+         "'# host-ok: <why>' tag (only per-round input staging and" \
+         "terminal fetches are allowed in the streamed trainer)" >&2
+    fail=1
+  fi
+
   if [ "$fail" -ne 0 ]; then exit 1; fi
   echo "lint: forbidden-API checks passed"
 }
@@ -98,6 +121,17 @@ repro.roofline.analysis, repro.serve, repro.train; print('imports OK')"
     exec python scripts/bench_compare.py BENCH_smoke.json \
       benchmarks/baselines/BENCH_smoke.json --strict --only train_
     ;;
+  train-shard-smoke)
+    lint
+    echo "train-shard-smoke: sharded parity battery (2-device subprocess" \
+         "bit-identity, numpy oracle, zero-retrace, alias parity)"
+    python -m pytest -x -q tests/test_train_shard.py
+    echo "train-shard-smoke: train_* ratios vs baseline (incl. the" \
+         "shard2/dense >= 1.5x and bit-identity asserts in the bench)"
+    python -m benchmarks.bench_train --smoke BENCH_smoke.json
+    exec python scripts/bench_compare.py BENCH_smoke.json \
+      benchmarks/baselines/BENCH_smoke.json --strict --only train_shard_
+    ;;
   update-smoke)
     echo "update-smoke: delta ingestion + engine.update parity batteries"
     python -m pytest -x -q -m "not slow" tests/test_deltas.py \
@@ -109,6 +143,6 @@ repro.roofline.analysis, repro.serve, repro.train; print('imports OK')"
     ;;
   *) echo "unknown target: $target" \
           "(want tier1|fast|smoke|lint|serve-smoke|train-smoke|" \
-          "update-smoke)" >&2
+          "train-shard-smoke|update-smoke)" >&2
      exit 2 ;;
 esac

@@ -98,3 +98,35 @@ def sgns_fused(ci: jnp.ndarray, po: jnp.ndarray, no: jnp.ndarray,
     )(ci, po, no, valid.reshape(b, 1))
     loss_sum, g_ci, g_po, g_no = out
     return loss_sum[0, 0], g_ci, g_po, g_no
+
+
+def sgns_row_grads(ci, po, no, valid, backend: str = "jnp"):
+    """Loss (masked *sum*) + per-row gradients for gathered SGNS rows.
+
+    The row-level counterpart of ``repro.core.skipgram.sgns_grads``: no
+    table scatter — the caller owns where the rows live (the sharded trainer
+    scatters them onto per-shard unique-row sets). ``backend="fused"`` runs
+    the Pallas kernel above; ``backend="jnp"`` is the same closed form the
+    kernel computes, kept here next to it so the two cannot drift.
+
+    ci, po: [B, D]; no: [B, K, D]; valid: [B] f32.
+    Returns (loss_sum, g_ci [B, D], g_po [B, D], g_no [B, K, D]).
+    """
+    if backend == "fused":
+        from repro.kernels.ops import sgns_fused_op
+        return sgns_fused_op(ci, po, no, valid)
+    if backend != "jnp":
+        raise ValueError(f"sgns backend must be jnp|fused, got {backend!r}")
+    pos_score = jnp.sum(ci * po, axis=-1, keepdims=True)       # [B, 1]
+    s_p = _sigmoid(pos_score)
+    neg_score = jnp.sum(no * ci[:, None, :], axis=-1)          # [B, K]
+    s_n = _sigmoid(neg_score)
+    loss = (jnp.logaddexp(0.0, -pos_score[:, 0]) +
+            jnp.sum(jnp.logaddexp(0.0, neg_score), axis=-1))   # [B]
+    loss_sum = jnp.sum(loss * valid)
+    coeff_p = (s_p - 1.0) * valid[:, None]                     # [B, 1]
+    coeff_n = s_n * valid[:, None]                             # [B, K]
+    g_po = coeff_p * ci
+    g_no = coeff_n[:, :, None] * ci[:, None, :]
+    g_ci = coeff_p * po + jnp.sum(coeff_n[:, :, None] * no, axis=1)
+    return loss_sum, g_ci, g_po, g_no

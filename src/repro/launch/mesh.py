@@ -27,3 +27,21 @@ def make_rw_mesh(mesh: Mesh | None = None) -> Mesh:
     devices = (np.asarray(mesh.devices).reshape(-1) if mesh is not None
                else np.asarray(jax.devices()))
     return Mesh(devices, ("rw",))
+
+
+def make_table_mesh(mesh: Mesh | None = None,
+                    max_shards: int | None = None) -> Mesh:
+    """1-D ``rw`` mesh for vertex-range-sharded SGNS tables (DESIGN.md §16).
+
+    Same axis name and device order as :func:`make_rw_mesh`, so table shard
+    *s* owns the same vertex range as the walk engine's graph shard *s* —
+    after ``relabel=degree`` the hot vertices are spread across table shards
+    the same deliberate way they are spread across graph shards.
+    ``max_shards`` restricts to a device prefix (benches compare shard
+    counts inside one multi-device process this way).
+    """
+    devices = (np.asarray(mesh.devices).reshape(-1) if mesh is not None
+               else np.asarray(jax.devices()))
+    if max_shards is not None:
+        devices = devices[:max_shards]
+    return Mesh(devices, ("rw",))

@@ -76,7 +76,8 @@ def run_node2vec(args):
         # streamed stage 2: runner.rounds() dispatches round k+1 before
         # yielding round k, so the trainer optimizes k while k+1 walks —
         # the corpus never materializes on host
-        trainer = StreamingSGNSTrainer.from_config(g.n, n2v)
+        trainer = StreamingSGNSTrainer.from_config(
+            g.n, n2v, shard_tables=args.shard_tables, mesh=mesh)
         emb, ts = trainer.train(runner.rounds())
         print(f"train[{ts.backend}]: {ts.rounds} rounds, {ts.steps} steps, "
               f"{ts.pairs} pairs in {ts.wall_seconds:.1f}s "
@@ -85,6 +86,10 @@ def run_node2vec(args):
         print(f"overlap: walk_wait {ts.walk_wait_seconds:.2f}s, "
               f"efficiency {ts.overlap_efficiency:.2f}; "
               f"h2d {ts.h2d_bytes} B vs {ts.h2d_bytes_concat} B staged")
+        if ts.shards > 1:
+            print(f"shards: {ts.shards} table shards, "
+                  f"collective {ts.collective_bytes} B "
+                  f"({ts.exposed_collective_bytes} B exposed)")
     out = os.path.join(args.ckpt_dir, "embeddings.npy")
     np.save(out, emb)
     print(f"embeddings: {emb.shape} -> {out}")
@@ -181,6 +186,11 @@ def main():
     ap.add_argument("--concat", action="store_true",
                     help="generate-then-train baseline instead of the "
                          "streamed on-device trainer")
+    ap.add_argument("--shard-tables", action="store_true",
+                    help="range-partition the SGNS tables + Adam moments "
+                         "over the rw mesh (sparse-collective sharded "
+                         "training; DESIGN.md §16). Bit-identical across "
+                         "shard counts; needs >1 device to actually shard")
     ap.add_argument("--steps", type=int, default=50)
     ap.add_argument("--batch", type=int, default=8)
     ap.add_argument("--seq", type=int, default=128)

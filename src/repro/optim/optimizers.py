@@ -123,5 +123,44 @@ def adamw(lr: ScalarOrSchedule, b1: float = 0.9, b2: float = 0.95,
     return adam(lr, b1=b1, b2=b2, eps=eps, weight_decay=weight_decay)
 
 
+def adam_rows(lr: ScalarOrSchedule, b1: float = 0.9, b2: float = 0.999,
+              eps: float = 1e-8) -> Optimizer:
+    """Row-sparse ("lazy") Adam for embedding tables.
+
+    Dense :func:`adam` decays the moments of *every* row every step — O(V·D)
+    table work per batch, the dominant cost once V outgrows the batch. Here
+    moments live per table row and only the rows gathered for the current
+    batch move; untouched rows keep their moments frozen (the standard
+    lazy-Adam embedding semantics, e.g. TF's LazyAdam). This is what makes
+    the sharded trainer's per-step cost O(touched-rows·D) instead of O(V·D).
+
+    ``init(params)`` matches :func:`adam` (an :class:`AdamState` whose
+    ``mu``/``nu`` mirror the tables, shardable with the same specs).
+    ``update(g_rows, (mu_rows, nu_rows), count)`` operates on *gathered
+    rows*: ``count`` is the already-incremented step, and it returns
+    ``(row_updates, new_mu_rows, new_nu_rows)`` for the caller to scatter
+    back — the caller owns row locality (which rows, which shard).
+    """
+
+    def init(params):
+        return AdamState(jnp.zeros((), jnp.int32),
+                         jax.tree.map(jnp.zeros_like, params),
+                         jax.tree.map(jnp.zeros_like, params))
+
+    def update(g_rows, rows_state, count):
+        mu_rows, nu_rows = rows_state
+        new_mu = b1 * mu_rows + (1 - b1) * g_rows
+        new_nu = b2 * nu_rows + (1 - b2) * (g_rows * g_rows)
+        c = count.astype(jnp.float32)
+        bc1 = 1 - b1 ** c
+        bc2 = 1 - b2 ** c
+        step_lr = _lr_at(lr, count - 1)
+        upd = -step_lr * (new_mu / bc1) / (jnp.sqrt(new_nu / bc2) + eps)
+        return upd, new_mu, new_nu
+
+    key = ("adam_rows", lr, b1, b2, eps) if not callable(lr) else None
+    return Optimizer(init, update, key)
+
+
 def apply_updates(params, updates):
     return jax.tree.map(lambda p, u: (p + u).astype(p.dtype), params, updates)

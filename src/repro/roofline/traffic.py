@@ -52,6 +52,28 @@ def walk_collective_bytes(num_shards: int, capacity: int, cap: int,
     return per_step * max(length - 1, 0)
 
 
+def sgns_exchange_bytes(u_rows: int, dim: int, num_shards: int,
+                        w_bytes: int = F32) -> int:
+    """Analytic per-device collective bytes of ONE sharded-SGNS train step
+    (``TrainStats.collective_bytes``; DESIGN.md §16).
+
+    Each step moves two sparse row sets through owner-masked psums: the
+    bucketed unique gather buffers out (each shard contributes its owned
+    rows) and the same buffers route the combined rows back. A ring
+    all-reduce moves ``2·(S−1)/S`` words per element per device, so for the
+    bucketed ``u_rows × dim`` f32 buffers::
+
+        bytes/device/step = 2 · (S−1)/S · u_rows · dim · 4
+
+    Zero when ``num_shards <= 1`` (no wire). Like ``walk_exchange_bytes``
+    this is napkin math kept in code — it feeds telemetry ratios, never an
+    absolute-time gate.
+    """
+    if num_shards <= 1:
+        return 0
+    return int(2 * (num_shards - 1) / num_shards * u_rows * dim * w_bytes)
+
+
 def walk_auto_capacity(deg, cap: Optional[int], num_shards: int,
                        walkers_per_shard: int, safety: float = 4.0,
                        floor: int = 8) -> int:

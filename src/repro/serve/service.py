@@ -208,6 +208,43 @@ class EmbeddingService:
             "cache_entries_dropped": int(dropped),
         }
 
+    # ------------------------------------------------------------ warming --
+    def warm_from_walks(self, walks, *, window: int = 0,
+                        top: Optional[int] = None) -> int:
+        """Pre-populate the ResultCache from walk-visit counts (ROADMAP
+        §serve remaining depth).
+
+        The last walk round of training is a free popularity oracle: a
+        vertex's visit count is proportional to its stationary walk
+        probability, which is exactly the degree-skew the admission policy
+        and Zipf traffic follow. Rank vertices by visits in ``walks``
+        (any ``[W, L]`` int array), keep the admitted ones, and compute
+        their ``("embed", node, window)`` entries through the normal
+        batched path — so a warmed entry is bit-identical to the one a cold
+        query would have produced (``embed`` is batch-composition
+        independent). ``top`` caps how many to warm (default: cache
+        capacity). Returns the number of entries cached.
+        """
+        counts = np.bincount(
+            np.asarray(walks, np.int64).ravel(), minlength=self.graph.n)
+        order = np.argsort(-counts, kind="stable")
+        order = order[counts[order] > 0]
+        if self.cache.admit is not None:
+            order = np.asarray([v for v in order if self.cache.admit(int(v))],
+                               np.int64)
+        budget = self.cache.capacity if top is None else min(
+            top, self.cache.capacity)
+        nodes = order[:budget].astype(np.int32)
+        warmed = 0
+        step = max(self.batcher.buckets)
+        for i in range(0, len(nodes), step):
+            chunk = nodes[i:i + step]
+            rows = self.embed(chunk, window=window)
+            for v, val in zip(chunk, rows):
+                warmed += self.cache.put(("embed", int(v), window), val,
+                                         node=int(v))
+        return warmed
+
     def _engine_for(self, window: int) -> WalkEngine:
         eng = self._engines.get(window)
         if eng is None:

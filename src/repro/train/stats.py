@@ -49,6 +49,20 @@ class TrainStats:
                              ``walks_to_sgns_batches`` path) would have
                              uploaded for the same steps: exact, so the
                              stream/concat H2D ratio is deterministic.
+    ``shards``             — table shards (1 = dense single-device tables).
+    ``collective_bytes``   — analytic per-device bytes the sparse row
+                             gathers/updates moved across the mesh
+                             (``roofline.traffic.sgns_exchange_bytes`` per
+                             step; exact — the bucketed buffer shapes are
+                             static). 0 when ``shards == 1``. Mirrors
+                             ``WalkStats.collective_bytes``.
+    ``exposed_collective_bytes`` — the part on the critical path. The
+                             sparse gather is barrier-style inside each
+                             step today, so exposed == total; the field
+                             exists (mirroring ``WalkStats``) so a future
+                             double-buffered exchange shows up as a drop.
+    ``collective_overlap_efficiency`` — ``1 − exposed/total`` (0 when
+                             nothing is on the wire).
     """
     backend: str
     rounds: int = 0
@@ -63,13 +77,18 @@ class TrainStats:
     tokens_per_sec: float = 0.0
     h2d_bytes: int = 0
     h2d_bytes_concat: int = 0
+    shards: int = 1
+    collective_bytes: int = 0
+    exposed_collective_bytes: int = 0
+    collective_overlap_efficiency: float = 0.0
 
 
 class TrainRecorder:
     """Mutable accumulator behind :class:`TrainStats`."""
 
-    def __init__(self, backend: str) -> None:
+    def __init__(self, backend: str, shards: int = 1) -> None:
         self.backend = backend
+        self.shards = shards
         self._waits: list[float] = []
         self._train_s = 0.0
         self.rounds = 0
@@ -78,14 +97,17 @@ class TrainRecorder:
         self.tokens = 0
         self.h2d_bytes = 0
         self.h2d_bytes_concat = 0
+        self.collective_bytes = 0
+        self.exposed_collective_bytes = 0
 
     # ------------------------------------------------------------ events --
     def walk_waited(self, seconds: float) -> None:
         self._waits.append(seconds)
 
     def round_trained(self, seconds: float, steps: int, pairs: int,
-                      tokens: int, h2d_bytes: int,
-                      h2d_bytes_concat: int) -> None:
+                      tokens: int, h2d_bytes: int, h2d_bytes_concat: int,
+                      collective_bytes: int = 0,
+                      exposed_collective_bytes: int | None = None) -> None:
         self._train_s += seconds
         self.rounds += 1
         self.steps += steps
@@ -93,6 +115,11 @@ class TrainRecorder:
         self.tokens += tokens
         self.h2d_bytes += h2d_bytes
         self.h2d_bytes_concat += h2d_bytes_concat
+        self.collective_bytes += collective_bytes
+        # barrier-style sparse gathers: exposed == total unless told better
+        self.exposed_collective_bytes += (
+            collective_bytes if exposed_collective_bytes is None
+            else exposed_collective_bytes)
 
     def finalized(self, seconds: float) -> None:
         """Terminal block (flushing the async step queue + fetching params)
@@ -126,4 +153,10 @@ class TrainRecorder:
             tokens_per_sec=self.tokens / wall,
             h2d_bytes=self.h2d_bytes,
             h2d_bytes_concat=self.h2d_bytes_concat,
+            shards=self.shards,
+            collective_bytes=self.collective_bytes,
+            exposed_collective_bytes=self.exposed_collective_bytes,
+            collective_overlap_efficiency=(
+                1.0 - self.exposed_collective_bytes / self.collective_bytes
+                if self.collective_bytes else 0.0),
         )

@@ -39,8 +39,10 @@ import numpy as np
 from repro.core.alias import build_alias
 from repro.core.skipgram import (SGNSConfig, init_params, normalize_embeddings,
                                  sgns_grads)
-from repro.optim.optimizers import adam, apply_updates
+from repro.optim.optimizers import adam, adam_rows, apply_updates
 from repro.train.pairs import device_negatives, device_pairs, num_pairs
+from repro.train.shard import (mesh_shards, pow2_bucket, shard_opt_state,
+                               shard_params, train_epoch_sharded)
 from repro.train.stats import TrainRecorder, TrainStats
 
 
@@ -94,14 +96,25 @@ def _train_epoch(params, opt_state, c, x, valid, perm2d, prob, alias, key,
 class StreamingSGNSTrainer:
     """Consume per-round walk arrays as they complete; keep all corpus work
     on device. One instance = one training run (params live across rounds).
+
+    ``shard_tables=True`` range-partitions the embedding tables (and their
+    Adam moments) across the 1-D ``rw`` mesh and runs each epoch under
+    ``shard_map`` with sparse owner gathers + lazy row-Adam
+    (``repro.train.shard``; DESIGN.md §16). The sharded run is bit-identical
+    across shard counts for the same seeds; note it is a *different
+    optimizer semantics* than the dense default (untouched rows keep their
+    moments frozen), so compare sharded runs against ``shard_tables=True``
+    on one device, not against the dense path.
     """
 
     def __init__(self, vocab: int, dim: int = 128, window: int = 10,
                  negatives: int = 5, batch_size: int = 1024,
                  lr: float = 0.025, epochs: int = 1, seed: int = 0,
                  sgns_backend: str = "jnp", power: float = 0.75,
-                 record_loss: bool = True):
+                 record_loss: bool = True, shard_tables: bool = False,
+                 mesh=None):
         self.vocab = vocab
+        self.dim = dim
         self.window = window
         self.negatives = negatives
         self.batch_size = batch_size
@@ -110,16 +123,33 @@ class StreamingSGNSTrainer:
         self.sgns_backend = sgns_backend
         self.power = power
         self.record_loss = record_loss
+        self.shard_tables = bool(shard_tables)
         scfg = SGNSConfig(vocab=vocab, dim=dim, negatives=negatives)
         self.params = init_params(scfg, jax.random.PRNGKey(seed))
-        self._opt = adam(lr)
-        self.opt_state = self._opt.init(self.params)
+        if self.shard_tables:
+            # mesh-partitioned tables + lazy row-Adam (repro.train.shard):
+            # same init values, padded to the shard multiple, range-sharded
+            from repro.launch.mesh import make_table_mesh
+            from jax.sharding import Mesh
+            self.mesh = mesh if isinstance(mesh, Mesh) and \
+                tuple(mesh.axis_names) == ("rw",) else make_table_mesh(mesh)
+            self.shards = mesh_shards(self.mesh)
+            self.params = shard_params(self.params, vocab, self.mesh)
+            self._opt = adam_rows(lr)
+            self.opt_state = shard_opt_state(self.params, self.mesh)
+            self._u_in = pow2_bucket(batch_size)
+            self._u_out = pow2_bucket(batch_size * (1 + negatives))
+        else:
+            self.mesh = None
+            self.shards = 1
+            self._opt = adam(lr)
+            self.opt_state = self._opt.init(self.params)
         self._counts = np.zeros(vocab, np.float64)
         self._key = jax.random.PRNGKey(seed)
         self._round = 0
         self._losses: list = []        # device scalars; fetched lazily
         self._pair_counts: list = []   # device scalars (valid pairs / round)
-        self.recorder = TrainRecorder(sgns_backend)
+        self.recorder = TrainRecorder(sgns_backend, shards=self.shards)
 
     @classmethod
     def from_config(cls, vocab: int, cfg, **overrides
@@ -147,7 +177,7 @@ class StreamingSGNSTrainer:
     def consume(self, walks: np.ndarray) -> None:
         """Train one epoch pass (``epochs`` sub-passes) over one round."""
         t0 = time.perf_counter()
-        walks = np.ascontiguousarray(walks, np.int32)
+        walks = np.ascontiguousarray(walks, np.int32)  # host-ok: round input
         w, l = walks.shape
         n_pairs = num_pairs(w, l, self.window)
         prob, alias, alias_bytes = self._alias_refresh(walks)
@@ -164,20 +194,34 @@ class StreamingSGNSTrainer:
         for e in range(self.epochs):
             pkey, skey = jax.random.split(jax.random.fold_in(rkey, e))
             perm2d = _perm_batches(pkey, n_pairs, steps, self.batch_size)
-            self.params, self.opt_state, losses = _train_epoch(
-                self.params, self.opt_state, c, x, valid, perm2d,
-                prob, alias, skey,
-                opt=self._opt, negatives=self.negatives,
-                backend=self.sgns_backend, n_pairs=n_pairs)
+            if self.shard_tables:
+                self.params, self.opt_state, losses = train_epoch_sharded(
+                    self.params, self.opt_state, c, x, valid, perm2d,
+                    prob, alias, skey,
+                    mesh=self.mesh, opt=self._opt,
+                    negatives=self.negatives, backend=self.sgns_backend,
+                    n_pairs=n_pairs, u_in=self._u_in, u_out=self._u_out)
+            else:
+                self.params, self.opt_state, losses = _train_epoch(
+                    self.params, self.opt_state, c, x, valid, perm2d,
+                    prob, alias, skey,
+                    opt=self._opt, negatives=self.negatives,
+                    backend=self.sgns_backend, n_pairs=n_pairs)
             if self.record_loss:
                 self._losses.append(losses)
         self._round += 1
         # concat-equivalent H2D: the host path stages center/pos/neg (i32)
         # + valid (f32) per step — deterministic, so the ratio metric is exact
         per_step = 4 * self.batch_size * (3 + self.negatives)
+        coll = 0
+        if self.shard_tables:
+            from repro.roofline.traffic import sgns_exchange_bytes
+            coll = steps * self.epochs * sgns_exchange_bytes(
+                self._u_in + self._u_out, self.dim, self.shards)
         self.recorder.round_trained(
             time.perf_counter() - t0, steps * self.epochs, 0, w * l,
-            walks.nbytes + alias_bytes, steps * self.epochs * per_step)
+            walks.nbytes + alias_bytes, steps * self.epochs * per_step,
+            collective_bytes=coll)
 
     # ------------------------------------------------------------- driver --
     def train(self, source: Iterable[np.ndarray],
@@ -198,7 +242,7 @@ class StreamingSGNSTrainer:
             except StopIteration:
                 break
             self.recorder.walk_waited(time.perf_counter() - t0)
-            self.consume(np.asarray(walks))
+            self.consume(np.asarray(walks))  # host-ok: per-round, not batch
             seen += 1
         emb, stats = self.finish(time.perf_counter() - t_start)
         return emb, stats
@@ -207,10 +251,13 @@ class StreamingSGNSTrainer:
                ) -> Tuple[np.ndarray, TrainStats]:
         """Flush the async step queue, fetch embeddings, freeze stats."""
         t0 = time.perf_counter()
-        emb = np.asarray(jax.device_get(normalize_embeddings(self.params)))
+        # terminal fetch ([:vocab] strips the shard-padding rows)
+        emb = np.asarray(jax.device_get(            # host-ok: terminal fetch
+            normalize_embeddings(self.params)))[:self.vocab]
         if self._pair_counts:
             self.recorder.pairs = int(sum(
-                int(p) for p in jax.device_get(self._pair_counts)))
+                int(p) for p in jax.device_get(     # host-ok: terminal fetch
+                    self._pair_counts)))
             self._pair_counts = [jnp.asarray(self.recorder.pairs)]
         self.recorder.finalized(time.perf_counter() - t0)
         if wall_seconds is None:   # direct consume() use, no train() driver
@@ -221,7 +268,8 @@ class StreamingSGNSTrainer:
         """Per-step losses, concatenated over epochs/rounds (device sync)."""
         if not self._losses:
             return np.zeros(0, np.float32)
-        return np.asarray(jax.device_get(jnp.concatenate(self._losses)))
+        return np.asarray(jax.device_get(           # host-ok: terminal fetch
+            jnp.concatenate(self._losses)))
 
 
 def train_streamed(g, cfg, mesh=None, checkpointer=None, **overrides
@@ -234,6 +282,8 @@ def train_streamed(g, cfg, mesh=None, checkpointer=None, **overrides
     """
     from repro.runtime.fault_tolerance import WalkRoundRunner
     runner = WalkRoundRunner(g, cfg, mesh=mesh, checkpointer=checkpointer)
+    if overrides.get("shard_tables") and "mesh" not in overrides:
+        overrides["mesh"] = mesh   # table shards align with graph shards
     trainer = StreamingSGNSTrainer.from_config(g.n, cfg, **overrides)
     emb, stats = trainer.train(runner.rounds())
     return emb, stats

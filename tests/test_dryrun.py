@@ -72,6 +72,6 @@ def test_small_mesh_lower_compile(arch, kind, seq, batch):
     r = subprocess.run([sys.executable, "-c", code], capture_output=True,
                        text=True, timeout=600,
                        env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin",
-                            "HOME": "/root"})
+                            "HOME": "/root", "JAX_PLATFORMS": "cpu"})
     assert r.returncode == 0, r.stderr[-3000:]
     assert "OK" in r.stdout

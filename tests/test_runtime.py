@@ -108,7 +108,8 @@ def test_rounds_resume_pipelined_sharded(tmp_path):
     r = subprocess.run(
         [sys.executable, "-c", PIPELINE_RESUME_SCRIPT, str(tmp_path)],
         capture_output=True, text=True, timeout=600,
-        env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin", "HOME": "/root"})
+        env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin", "HOME": "/root",
+             "JAX_PLATFORMS": "cpu"})
     assert r.returncode == 0, r.stderr[-3000:]
     assert "OK" in r.stdout
 

@@ -215,3 +215,45 @@ def test_accepts_raw_sgns_params(graph):
                                   serving_table(params))
     norms = np.linalg.norm(np.asarray(svc.emb), axis=1)
     np.testing.assert_allclose(norms, 1.0, atol=1e-5)
+
+
+# --------------------------------------------------------------- warming ----
+
+def test_warm_from_walks(graph):
+    """Cache warming from walk-visit counts: admitted top-visited vertices
+    land in the cache, entries are bit-identical to cold queries, and a
+    subsequent submit for a warmed node is answered from cache."""
+    clock = VirtualClock()
+    svc = _service(graph, clock, cache_size=32)
+    # skewed synthetic "last round": hubs (low ids) dominate visit counts
+    walks = zipf_nodes(graph.n, 40 * 8, alpha=1.2, seed=3).reshape(40, 8)
+    warmed = svc.warm_from_walks(walks, window=0)
+    assert 0 < warmed <= 32
+    assert len(svc.cache) == warmed
+    # every warmed entry == the batched cold computation for that node
+    keys = svc.cache.keys()
+    nodes = np.asarray([k[1] for k in keys], np.int32)
+    cold = _service(graph, VirtualClock(), cache_size=32)
+    want = cold.embed(nodes, window=0)
+    for key, w in zip(keys, want):
+        np.testing.assert_array_equal(svc.cache.get(key), w)
+    # the most-visited vertex answers from cache, no walk relaunched
+    counts = np.bincount(walks.ravel(), minlength=graph.n)
+    hot = int(np.argmax(counts))
+    hits0 = svc.cache.hits
+    svc.submit("embed", hot, now=clock())
+    svc.drain(now=clock())
+    assert svc.cache.hits == hits0 + 1
+
+
+def test_warm_from_walks_respects_top_and_admission(graph):
+    """`top` caps the warm budget below capacity; inadmissible (cold-tail)
+    vertices are never warmed even when visited."""
+    clock = VirtualClock()
+    svc = _service(graph, clock, cache_size=16)
+    walks = zipf_nodes(graph.n, 64, alpha=1.1, seed=9).reshape(8, 8)
+    warmed = svc.warm_from_walks(walks, window=0, top=5)
+    assert warmed <= 5 and len(svc.cache) == warmed
+    if svc.cache.admit is not None:
+        for _, v, _ in svc.cache.keys():
+            assert svc.cache.admit(int(v))

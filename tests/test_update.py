@@ -273,6 +273,6 @@ def test_sharded_update_matches_fresh_rebuild():
     r = subprocess.run([sys.executable, "-c", SHARDED_UPDATE_SCRIPT],
                        capture_output=True, text=True, timeout=600,
                        env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin",
-                            "HOME": "/root"})
+                            "HOME": "/root", "JAX_PLATFORMS": "cpu"})
     assert r.returncode == 0, r.stderr[-3000:]
     assert "OK" in r.stdout

@@ -36,7 +36,7 @@ def _run(n, family, cap, p, q, mode):
     r = subprocess.run([sys.executable, "-c", code], capture_output=True,
                        text=True, timeout=600,
                        env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin",
-                            "HOME": "/root"})
+                            "HOME": "/root", "JAX_PLATFORMS": "cpu"})
     assert r.returncode == 0, r.stderr[-3000:]
     assert "OK" in r.stdout
 
@@ -72,7 +72,8 @@ def test_elastic_device_count_invariance():
         r = subprocess.run([sys.executable, "-c", code], capture_output=True,
                            text=True, timeout=600,
                            env={"PYTHONPATH": "src",
-                                "PATH": "/usr/bin:/bin", "HOME": "/root"})
+                                "PATH": "/usr/bin:/bin", "HOME": "/root",
+                                "JAX_PLATFORMS": "cpu"})
         assert r.returncode == 0, r.stderr[-3000:]
     # both already compared against the SAME single-device reference ->
     # transitively identical across device counts.
